@@ -1,0 +1,26 @@
+"""Shared benchmark helpers: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+_ROWS = []
+
+
+def emit(bench: str, name: str, value, unit: str, **extra) -> None:
+    tags = ",".join(f"{k}={v}" for k, v in extra.items())
+    line = f"{bench},{name},{value},{unit}" + (f",{tags}" if tags else "")
+    _ROWS.append(line)
+    print(line, flush=True)
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def header() -> None:
+    print("bench,name,value,unit,tags", flush=True)

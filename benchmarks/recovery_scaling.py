@@ -1,0 +1,90 @@
+"""Paper Figs. 5/6 + Table 3: communication-recovery overhead scaling.
+
+Fig. 5  — recovery time vs #procs for SHRINKING / NON-SHRINKING(REUSE) /
+          NON-SHRINKING(NO-REUSE), 2 procs per node.
+Fig. 6  — recovery time vs procs-per-node at a fixed node count.
+Table 3 — per-phase breakdown of one NON-SHRINKING NO-REUSE recovery at the
+          largest size.
+
+The SimComm backend reproduces the recovery *bookkeeping* at sizes beyond
+what one CPU can host as real processes (threads as ranks); the real-process
+path is exercised by tests/test_runtime.py and examples/train_cluster.py.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.comm import ProcFailedError, RevokedError
+from repro.core.comm_sim import SimWorld
+from repro.core.env import CraftEnv
+
+
+def _recover_once(n_procs: int, ppn: int, policy: str, spawn: str) -> dict:
+    env = CraftEnv.capture({
+        "CRAFT_COMM_RECOVERY_POLICY": policy,
+        "CRAFT_COMM_SPAWN_POLICY": spawn,
+    })
+    world = SimWorld(n_procs, procs_per_node=ppn, spare_nodes=2, env=env)
+    victim = n_procs - 1
+
+    def fn(comm):
+        recovered = {}
+        while True:
+            try:
+                if comm.rank == 0 and comm.epoch == 0:
+                    world.kill(victim)
+                for _ in range(3):
+                    comm.barrier()
+                return recovered
+            except (ProcFailedError, RevokedError):
+                try:
+                    comm.revoke()
+                except Exception:
+                    pass
+                t0 = time.perf_counter()
+                comm = comm.recover(policy=policy)
+                recovered = dict(comm.last_recovery_stats())
+                recovered["wall_s"] = time.perf_counter() - t0
+
+    out = world.run(fn, timeout=600)
+    stats = [v for v in out.values() if v]
+    stats.sort(key=lambda s: -s.get("wall_s", 0.0))
+    return stats[0] if stats else {}
+
+
+def fig5(sizes, ppn=2) -> None:
+    for n in sizes:
+        for policy, spawn in (("SHRINKING", "NO-REUSE"),
+                              ("NON-SHRINKING", "REUSE"),
+                              ("NON-SHRINKING", "NO-REUSE")):
+            s = _recover_once(n, ppn, policy, spawn)
+            emit("fig5_recovery_scaling", f"{policy}/{spawn}",
+                 round(s.get("wall_s", float("nan")), 5), "s", procs=n)
+
+
+def fig6(n_nodes, ppns) -> None:
+    for ppn in ppns:
+        s = _recover_once(n_nodes * ppn, ppn, "NON-SHRINKING", "NO-REUSE")
+        emit("fig6_procs_per_node", f"ppn{ppn}",
+             round(s.get("wall_s", float("nan")), 5), "s",
+             nodes=n_nodes, procs=n_nodes * ppn)
+
+
+def table3(n_procs, ppn=2) -> None:
+    s = _recover_once(n_procs, ppn, "NON-SHRINKING", "NO-REUSE")
+    for phase in ("revoke_shrink_s", "spawn_info_s", "spawn_merge_s",
+                  "redistribute_s", "resource_mgmt_s"):
+        emit("table3_recovery_breakdown", phase,
+             round(s.get(phase, float("nan")), 6), "s", procs=n_procs)
+
+
+def main(full: bool = False) -> None:
+    sizes = [8, 16, 32, 64, 128] + ([256, 512] if full else [])
+    fig5(sizes)
+    fig6(16, [1, 2, 4, 8])
+    table3(sizes[-1])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""§Roofline report: the three-term table from the dry-run JSON records.
+
+Reads experiments/dryrun/<mesh>/<arch>__<shape>.json (produced by
+``python -m repro.launch.dryrun --all``) and emits one row per cell:
+compute/memory/collective seconds, the dominant term, the
+MODEL_FLOPS/HLO_FLOPS ratio and the per-device memory fit.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def main(full: bool = False) -> None:
+    if not DRYRUN_DIR.exists():
+        emit("roofline", "missing_dryrun_records", 0, "count")
+        return
+    n = 0
+    for mesh_dir in sorted(DRYRUN_DIR.iterdir()):
+        if not mesh_dir.is_dir():
+            continue
+        for f in sorted(mesh_dir.glob("*.json")):
+            d = json.loads(f.read_text())
+            r = d["roofline"]
+            cell = f"{d['arch']}__{d['shape']}__{d['mesh']}"
+            emit("roofline", cell + "__compute", round(r["compute_s"], 4),
+                 "s")
+            emit("roofline", cell + "__memory", round(r["memory_s"], 4), "s")
+            emit("roofline", cell + "__collective",
+                 round(r["collective_s"], 4), "s")
+            emit("roofline", cell + "__dominant", r["dominant"], "")
+            emit("roofline", cell + "__model_hlo_ratio",
+                 round(d["model_hlo_ratio"], 4), "")
+            emit("roofline", cell + "__peak_gb",
+                 round(d["memory"]["peak_per_device_bytes"] / 1e9, 2), "GB")
+            n += 1
+    emit("roofline", "cells_reported", n, "count")
+
+
+if __name__ == "__main__":
+    main()

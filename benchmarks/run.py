@@ -1,0 +1,60 @@
+"""Benchmark harness — one benchmark per paper table/figure (DESIGN.md §6).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Emits ``bench,name,value,unit[,tags]`` CSV rows:
+
+    table3_recovery_breakdown   paper Table 3 — recovery phase times
+    fig5_recovery_scaling       paper Fig. 5 — recovery vs #procs, 3 policies
+    fig6_procs_per_node         paper Fig. 6 — recovery vs procs/node
+    fig7_spawn_merge            paper Fig. 7 — spawn+merge scaling
+    table4_cr_overhead          paper Table 4 — none/sync/async/node CP
+    fig8_failure_scenarios      paper Fig. 8 — OH_cp / OH_rec / OH_redo
+    roofline                    §Roofline terms per dry-run cell
+    kernel_*                    kernel micro-benchmarks
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    cr_overhead, kernel_bench, lanczos_aft, recovery_scaling,
+    roofline_report, spawn_merge,
+)
+from benchmarks.common import emit, header
+
+BENCHES = [
+    ("recovery_scaling", recovery_scaling.main),
+    ("spawn_merge", spawn_merge.main),
+    ("cr_overhead", cr_overhead.main),
+    ("lanczos_aft", lanczos_aft.main),
+    ("roofline_report", roofline_report.main),
+    ("kernel_bench", kernel_bench.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    header()
+    failed = 0
+    for name, fn in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn(full=args.full)
+            emit("harness", f"{name}_status", "ok", "")
+        except Exception:
+            failed += 1
+            emit("harness", f"{name}_status", "FAILED", "")
+            traceback.print_exc()
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Fig. 7: spawn+merge cost vs communicator size.
+
+The paper benchmarks MPI_Comm_spawn + MPI_Intercomm_merge of 20 processes
+against communicators of growing size and finds ULFM-1.1 scales poorly.
+Our analog: kill k members of an n-member epoch and measure the
+spawn+merge phase of the non-shrinking recovery (replacement threads
+registering into the next epoch + the join barrier).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from benchmarks.recovery_scaling import _recover_once
+
+
+def main(full: bool = False) -> None:
+    sizes = [8, 16, 32, 64, 128] + ([256] if full else [])
+    for n in sizes:
+        s = _recover_once(n, 2, "NON-SHRINKING", "NO-REUSE")
+        emit("fig7_spawn_merge", "spawn_merge",
+             round(s.get("spawn_merge_s", float("nan")), 6), "s", procs=n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Roofline analysis: three-term model derived from the compiled dry-run."""

@@ -1,0 +1,606 @@
+"""Three-term roofline analysis from the compiled (partitioned) HLO module.
+
+Why a custom HLO analyzer instead of ``compiled.cost_analysis()``:
+
+  * XLA's ``HloCostAnalysis`` visits every instruction **once** — a
+    ``lax.scan`` over 61 layers reports the FLOPs of *one* layer (verified
+    empirically, see EXPERIMENTS.md §Roofline/Methodology).  Unrolling every
+    loop purely to make the built-in counter honest would explode compile
+    times across the 40-cell × 2-mesh dry-run matrix.
+  * ``cost_analysis()`` is an aggregate — collective traffic cannot be
+    separated from HBM traffic, and per-collective attribution (which
+    all-gather dominates?) is impossible.
+
+So this module parses ``compiled.as_text()`` (the post-SPMD, per-device
+module — shapes in it are already per-chip) into a call graph, recovers
+every ``while`` loop's trip count from its condition computation
+(``constant(N)`` + ``compare …, direction=LT``), and walks the graph with
+multipliers so an op inside a scan body is counted trip-count times:
+
+    FLOPs       — every ``dot`` op: 2 × |output| × contracted dim size
+                  (einsums, matmuls, and one-hot dispatches all lower to
+                  dot; elementwise FLOPs are ignored — they are VPU-bound
+                  and negligible against MXU work at these shapes).
+    HBM bytes   — Σ over material ops of (operand + output bytes); fusion
+                  internals are on-chip and excluded, which is exactly the
+                  post-fusion HBM-traffic approximation a roofline wants.
+    collective  — per-op *wire* bytes with the standard ring-algorithm
+                  effective sizes:
+                      all-gather       out − in        (received bytes)
+                      reduce-scatter   in − out        (sent bytes)
+                      all-reduce       2 × in × (g−1)/g
+                      all-to-all       in × (g−1)/g
+                      collective-permute  in
+                  where g = replica-group size parsed from the op.
+
+Terms (seconds, per device — the module is per-device so chips divide out):
+
+    compute_s    = flops / PEAK_FLOPS
+    memory_s     = hbm_bytes / HBM_BW
+    collective_s = wire_bytes / ICI_BW
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+# --------------------------------------------------------------------- HW
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# f32[6,128,256]{2,1,0:T(8,128)}  →  dtype="f32", dims=(6,128,256)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")           # /*index=5*/ tuple comments
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OPCODE_RE = re.compile(r"([A-Za-z][\w\-]*)\(")
+_NOT_OPCODES = set(_DTYPE_BYTES) | {"T", "tuple_index"}
+_CALLED_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (sums tuple elements)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", ()
+    dtype, dims = m.groups()
+    return dtype, tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str                 # result type (tuple types included)
+    args_str: str                 # operand list text (inside the op parens)
+    line: str                     # comment-stripped full line
+    is_root: bool = False
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    # name -> result type string (params included) for operand resolution
+    symbols: Dict[str, str]
+
+
+def _parse_op(line: str) -> Optional[Op]:
+    line = _COMMENT_RE.sub("", line).strip()
+    is_root = line.startswith("ROOT ")
+    nm = _NAME_RE.match(line)
+    if not nm:
+        return None
+    name, rest = nm.groups()
+    # the opcode is the first `word(` that is not a dtype/layout token —
+    # tuple result types contain `(`, layouts contain `T(8,128)`
+    opcode, op_match = None, None
+    for m in _OPCODE_RE.finditer(rest):
+        if m.group(1) not in _NOT_OPCODES:
+            opcode, op_match = m.group(1), m
+            break
+    if opcode is None:
+        return None
+    type_str = rest[: op_match.start()].strip()
+    after = rest[op_match.end():]
+    args_str = after.split(")", 1)[0]
+    return Op(name, opcode, type_str, args_str, line, is_root)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+                # (parameter types come from the `parameter(N)` body ops)
+            continue
+        if line.rstrip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = _parse_op(line)
+        if op:
+            cur.symbols[op.name] = op.type_str
+            cur.ops.append(op)
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _while_trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Trip count from the condition computation: compare(iv, constant(N))."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for op in cond.ops:
+        consts += [int(v) for v in _CONST_RE.findall(op.line)]
+    # condition may route compare through a wrapped fusion; constants live
+    # in the condition computation itself (jax scan: `lt iv N`)
+    for op in cond.ops:
+        called = _CALLED_RE.findall(op.line)
+        for c in called:
+            sub = comps.get(c)
+            if sub:
+                for sop in sub.ops:
+                    consts += [int(v) for v in _CONST_RE.findall(sop.line)]
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """Execution count of each computation (entry=1, scan bodies=trips).
+
+    The call graph is a DAG; edges are processed in topological order so a
+    computation's multiplier is final before its callees accumulate it.
+    """
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {name: 1 for name in comps}
+    # edges: parent -> [(child, local_factor)]
+    edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        for op in comp.ops:
+            called = _CALLED_RE.findall(op.line)
+            if not called:
+                continue
+            factor = 1
+            if op.opcode == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", op.line)
+                trips = _while_trip_count(comps, cm.group(1)) if cm else 1
+                factor = max(1, trips)
+            for c in called:
+                if c in comps:
+                    edges[cname].append((c, factor))
+    return _propagate(comps, entry, edges)
+
+
+def _propagate(comps, entry, edges) -> Dict[str, int]:
+    # DFS topological order from entry
+    order: List[str] = []
+    state: Dict[str, int] = {}
+
+    def visit(n: str) -> None:
+        stack = [(n, iter(edges.get(n, ())))]
+        state[n] = 1
+        while stack:
+            node, it = stack[-1]
+            advanced = False
+            for child, _ in it:
+                if state.get(child, 0) == 0:
+                    state[child] = 1
+                    stack.append((child, iter(edges.get(child, ()))))
+                    advanced = True
+                    break
+            if not advanced:
+                state[node] = 2
+                order.append(node)
+                stack.pop()
+
+    visit(entry.name)
+    mult: Dict[str, int] = defaultdict(int)
+    mult[entry.name] = 1
+    for parent in reversed(order):          # parents before children
+        base = mult[parent]
+        if base == 0:
+            continue
+        for child, factor in edges.get(parent, ()):
+            mult[child] += base * factor
+    return dict(mult)
+
+
+def _material_comps(comps: Dict[str, Computation]) -> set:
+    """Computations whose ops touch HBM: entry + control-flow bodies.
+
+    Computations reached via ``calls=``/``to_apply=`` are fusion/reducer
+    bodies — their internal ops run on-chip and must not count toward HBM
+    traffic (the *fusion op itself*, at its call site, carries the traffic).
+    """
+    entry = comps.get("__entry__")
+    if entry is None:
+        return set(comps)
+    material = {entry.name}
+    frontier = [entry.name]
+    while frontier:
+        comp = comps[frontier.pop()]
+        for op in comp.ops:
+            for attr in ("body", "condition"):
+                m = re.search(attr + r"=%?([\w.\-]+)", op.line)
+                if m and m.group(1) in comps and m.group(1) not in material:
+                    material.add(m.group(1))
+                    frontier.append(m.group(1))
+    return material
+
+
+def _dot_flops(op: Op, comp: Computation) -> int:
+    """2 × |out| × contracted-size for a dot op (operands via symbol table)."""
+    _, out_dims = _first_shape(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    operands = _OPERAND_RE.findall(op.args_str)
+    contract = 1
+    if operands:
+        lhs_type = comp.symbols.get(operands[0], "")
+        _, lhs_dims = _first_shape(lhs_type)
+        cm = _CONTRACT_RE.search(op.line)
+        if cm and lhs_dims:
+            for idx in (int(i) for i in cm.group(1).split(",") if i):
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+    return 2 * out_elems * contract
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "while", "conditional", "call", "custom-call",
+    "partition-id", "replica-id", "bitcast-convert",
+}
+
+
+def _fusion_param_read_bytes(comps: Dict[str, Computation],
+                             fused_name: str) -> Optional[Dict[int, int]]:
+    """Bytes actually read from each parameter of a fused computation.
+
+    A scan body indexes its stacked xs arrays with ``dynamic-slice`` ops
+    *inside* kLoop fusions — charging the full stacked operand (tens of GB)
+    per iteration would overcount HBM traffic ~n_layers×.  If every use of
+    a parameter is a (dynamic-)slice, the traffic is the slice bytes.
+    """
+    fused = comps.get(fused_name)
+    if fused is None:
+        return None
+    # param index -> name
+    pname_by_idx: Dict[int, str] = {}
+    for fop in fused.ops:
+        if fop.opcode == "parameter":
+            m = re.match(r"(\d+)", fop.args_str.strip())
+            if m:
+                pname_by_idx[int(m.group(1))] = fop.name
+    reads: Dict[int, int] = {}
+    for idx, pname in pname_by_idx.items():
+        slice_bytes = 0
+        sliced_only = True
+        used = False
+        for fop in fused.ops:
+            if fop.opcode == "parameter":
+                continue
+            ops_used = _OPERAND_RE.findall(fop.args_str)
+            if pname not in ops_used:
+                continue
+            used = True
+            if fop.opcode in ("dynamic-slice", "slice"):
+                slice_bytes += fop.out_bytes
+            else:
+                sliced_only = False
+                break
+        if used and sliced_only and slice_bytes:
+            reads[idx] = slice_bytes
+    return reads
+
+
+def _elems(type_str: str) -> int:
+    _, dims = _first_shape(type_str)
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _fusion_dus_update_bytes(comps, fused_name: str) -> Optional[int]:
+    """If the fused computation is an in-place stack write (root is a
+    dynamic-update-slice, possibly wrapped in dtype converts/bitcasts — the
+    scan-residual save pattern), return the update's byte size.
+
+    The XLA:CPU emitter expresses these as whole-stack convert→DUS→convert
+    round trips; a TPU compile aliases the buffer and touches only the
+    updated slice, which is what the v5e roofline should model.
+    """
+    fused = comps.get(fused_name) if comps else None
+    if fused is None:
+        return None
+    root = next((f for f in fused.ops if f.is_root), None)
+    if root is None:
+        return None
+    # unwrap convert/bitcast chains down to the root-feeding op
+    seen = 0
+    while root.opcode in ("convert", "bitcast", "copy") and seen < 4:
+        src = _OPERAND_RE.findall(root.args_str)
+        nxt = next((f for f in fused.ops if src and f.name == src[0]), None)
+        if nxt is None:
+            return None
+        root, seen = nxt, seen + 1
+    if root.opcode != "dynamic-update-slice":
+        return None
+    ops_used = _OPERAND_RE.findall(root.args_str)
+    if len(ops_used) >= 2:
+        t = fused.symbols.get(ops_used[1])
+        if t:
+            return _shape_bytes(t)
+    return None
+
+
+def _op_hbm_bytes(op: Op, comp: Computation,
+                  comps: Optional[Dict[str, Computation]] = None) -> int:
+    if op.opcode in _SKIP_BYTES_OPS or op.opcode in _COLLECTIVES:
+        return 0
+    if op.opcode in ("dynamic-slice", "slice", "gather"):
+        return 2 * op.out_bytes
+    operands = _OPERAND_RE.findall(op.args_str)
+    if op.opcode == "dynamic-update-slice":
+        t = comp.symbols.get(operands[1]) if len(operands) > 1 else None
+        return 2 * _shape_bytes(t) if t else op.out_bytes
+    sliced_reads: Dict[int, int] = {}
+    dus_update: Optional[int] = None
+    if op.opcode == "fusion" and comps is not None:
+        cm = re.search(r"calls=%?([\w.\-]+)", op.line)
+        if cm:
+            sliced_reads = _fusion_param_read_bytes(comps, cm.group(1)) or {}
+            dus_update = _fusion_dus_update_bytes(comps, cm.group(1))
+    out_elems = _elems(op.type_str)
+    total = op.out_bytes if dus_update is None else 2 * dus_update
+    for i, o in enumerate(operands):
+        if i in sliced_reads:
+            total += sliced_reads[i]
+            continue
+        t = comp.symbols.get(o)
+        if not t:
+            continue
+        if dus_update is not None and _elems(t) == out_elems:
+            continue  # the aliased stack buffer itself — in-place, no read
+        total += _shape_bytes(t)
+    return total
+
+
+def _collective_wire_bytes(op: Op, comp: Computation) -> Tuple[str, int]:
+    """(kind, effective wire bytes) for a collective op."""
+    kind = op.opcode.replace("-start", "")
+    operands = _OPERAND_RE.findall(op.args_str)
+    in_bytes = sum(
+        _shape_bytes(comp.symbols.get(o, "")) for o in operands)
+    out_bytes = op.out_bytes
+    g = 1
+    gm = _GROUPS_RE.search(op.line)
+    if gm:
+        g = int(gm.group(2))
+    if g <= 1:
+        return kind, 0
+    if kind == "all-gather":
+        return kind, max(0, out_bytes - in_bytes)
+    if kind == "reduce-scatter":
+        return kind, max(0, in_bytes - out_bytes)
+    if kind == "all-reduce":
+        return kind, int(2 * in_bytes * (g - 1) / g)
+    if kind == "all-to-all":
+        return kind, int(in_bytes * (g - 1) / g)
+    return kind, in_bytes      # collective-permute
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    flops: float                      # per device, trip-count corrected
+    hbm_bytes: float                  # per device, VMEM-scope adjusted
+    hbm_bytes_unfused: float          # per device, raw HLO traffic
+    collective_bytes: float           # per device, wire-effective
+    collective_by_kind: Dict[str, float]
+    top_collectives: List[Tuple[str, float]]   # (description, bytes)
+    n_collective_ops: int
+
+    # ---- derived terms (seconds) ----
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_unfused": self.hbm_bytes_unfused,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_kind": self.collective_by_kind,
+            "top_collectives": self.top_collectives[:10],
+            "n_collective_ops": self.n_collective_ops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(hlo_text: str,
+            vmem_scopes: Tuple[str, ...] = ("pallas_equiv",)
+            ) -> RooflineReport:
+    """``vmem_scopes``: ``jax.named_scope`` markers for regions the TPU
+    target runs as a Pallas kernel — their intermediates live in VMEM, so
+    marked ops are excluded from HBM traffic and the enclosing ``while``
+    (the kernel's scan) is charged its loop-boundary bytes once per
+    invocation (= the kernel's q/k/v/out HBM IO).  The unadjusted number is
+    kept as ``hbm_bytes_unfused``."""
+    comps = parse_module(hlo_text)
+    mult = _multipliers(comps)
+    material = _material_comps(comps)
+
+    def _marked(op: Op) -> bool:
+        return any(s in op.line for s in vmem_scopes)
+
+    def _body_marked(body_name: str) -> bool:
+        body = comps.get(body_name)
+        if body is None:
+            return False
+        n = sum(1 for o in body.ops if o.opcode not in (
+            "parameter", "get-tuple-element", "tuple", "constant"))
+        nm = sum(1 for o in body.ops if _marked(o))
+        return n > 0 and nm >= max(1, n // 2)
+
+    flops = 0.0
+    hbm = 0.0
+    hbm_unfused = 0.0
+    coll_total = 0.0
+    coll_kind: Dict[str, float] = defaultdict(float)
+    coll_list: List[Tuple[str, float]] = []
+    n_coll = 0
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for op in comp.ops:
+            if op.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp)
+            if op.opcode.replace("-start", "") in _COLLECTIVES:
+                if op.opcode.endswith("-done"):
+                    continue
+                kind, wire = _collective_wire_bytes(op, comp)
+                coll_total += m * wire
+                coll_kind[kind] += m * wire
+                n_coll += m
+                desc = f"{kind} {op.type_str.strip()[:48]} x{m}"
+                coll_list.append((desc, m * wire))
+            elif name in material:
+                b = _op_hbm_bytes(op, comp, comps)
+                hbm_unfused += m * b
+                if op.opcode == "while":
+                    bm = re.search(r"body=%?([\w.\-]+)", op.line)
+                    if bm and _body_marked(bm.group(1)):
+                        # Pallas-kernel scan: charge HBM boundary IO once
+                        hbm += m * 2 * op.out_bytes
+                elif not _marked(op):
+                    hbm += m * b
+    coll_list.sort(key=lambda kv: -kv[1])
+    return RooflineReport(
+        flops=flops, hbm_bytes=hbm, hbm_bytes_unfused=hbm_unfused,
+        collective_bytes=coll_total,
+        collective_by_kind=dict(coll_kind), top_collectives=coll_list,
+        n_collective_ops=n_coll,
+    )
+
+
+# ------------------------------------------------------------- MODEL_FLOPS
+def model_flops(cfg, seq_len: int, global_batch: int, kind: str,
+                n_chips: int) -> float:
+    """Per-chip useful model FLOPs: 6·N_active·D train, 2·N_active·D fwd."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq_len * global_batch
+        total = 6.0 * n_active * tokens
+    elif kind == "prefill":
+        tokens = seq_len * global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one new token per sequence
+        total = 2.0 * n_active * global_batch
+    return total / n_chips
+
+
+def format_report(rep: RooflineReport, model_fl_per_chip: float = 0.0) -> str:
+    lines = [
+        f"  flops/device          {rep.flops:.4e}",
+        f"  hbm bytes/device      {rep.hbm_bytes:.4e} "
+        f"(unfused {rep.hbm_bytes_unfused:.3e})",
+        f"  collective bytes/dev  {rep.collective_bytes:.4e}",
+        f"  compute term          {rep.compute_s * 1e3:10.3f} ms",
+        f"  memory term           {rep.memory_s * 1e3:10.3f} ms",
+        f"  collective term       {rep.collective_s * 1e3:10.3f} ms",
+        f"  dominant              {rep.dominant}",
+    ]
+    if model_fl_per_chip:
+        ratio = model_fl_per_chip / max(rep.flops, 1.0)
+        lines.append(f"  MODEL/HLO flops ratio {ratio:10.3f}")
+    if rep.collective_by_kind:
+        kinds = ", ".join(f"{k}={v:.3e}"
+                          for k, v in sorted(rep.collective_by_kind.items()))
+        lines.append(f"  collectives by kind   {kinds}")
+    return "\n".join(lines)
+
+
+def save_json(path, payload: dict) -> None:
+    from pathlib import Path
+
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(payload, indent=2, default=float))

@@ -1,0 +1,1 @@
+"""Benchmark applications (the paper's showcase workloads)."""

@@ -1,0 +1,178 @@
+"""Lanczos eigensolver on a matrix-free graphene Hamiltonian (paper §5.1).
+
+The paper's showcase application finds extremal eigenvalues of a sparse
+matrix from the quantum-mechanical description of electron transport in
+graphene, generated on the fly (never read from disk).  TPU adaptation
+(DESIGN.md §2): instead of a GHOST CRS SpMV we keep the same on-the-fly
+property with a *matrix-free stencil* matvec — the nearest-neighbor
+tight-binding Hamiltonian of the honeycomb lattice acting on a state laid
+out as an (nx, ny, 2) grid (2 = the A/B sublattices):
+
+    (H ψ)_A(x, y) = t · [ψ_B(x, y) + ψ_B(x-1, y) + ψ_B(x, y-1)]
+    (H ψ)_B(x, y) = t · [ψ_A(x, y) + ψ_A(x+1, y) + ψ_A(x, y+1)]
+
+(periodic boundaries via jnp.roll) + an optional on-site disorder term.
+Dense stencil ops, no gathers — TPU-idiomatic, same math as the paper's
+benchmark family.  H is Hermitian, spectrum ⊂ [-3|t|-W, 3|t|+W].
+
+The Lanczos loop is CRAFT-checkpointed exactly like the paper's benchmark:
+the two live Lanczos vectors, α/β arrays, and the iteration counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Box, Checkpoint
+
+
+@dataclasses.dataclass(frozen=True)
+class GrapheneConfig:
+    nx: int = 64
+    ny: int = 64
+    t: float = 1.0           # hopping
+    disorder: float = 0.0    # on-site disorder amplitude W
+    seed: int = 0
+
+    @property
+    def n(self) -> int:
+        return self.nx * self.ny * 2
+
+
+def onsite(cfg: GrapheneConfig) -> jnp.ndarray:
+    if cfg.disorder == 0.0:
+        return jnp.zeros((cfg.nx, cfg.ny, 2), jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    return cfg.disorder * jax.random.uniform(
+        key, (cfg.nx, cfg.ny, 2), jnp.float32, -1.0, 1.0)
+
+
+def matvec(cfg: GrapheneConfig, eps: jnp.ndarray, psi: jnp.ndarray):
+    """H @ psi for psi of shape (nx, ny, 2) — generated on the fly."""
+    a, b = psi[..., 0], psi[..., 1]
+    hb = cfg.t * (a + jnp.roll(a, -1, 0) + jnp.roll(a, -1, 1))
+    ha = cfg.t * (b + jnp.roll(b, 1, 0) + jnp.roll(b, 1, 1))
+    out = jnp.stack([ha, hb], axis=-1)
+    return out + eps * psi
+
+
+def _normalize(v):
+    nrm = jnp.sqrt(jnp.sum(v * v))
+    return v / nrm, nrm
+
+
+@dataclasses.dataclass
+class LanczosResult:
+    eigenvalue: float
+    alphas: np.ndarray
+    betas: np.ndarray
+    iterations: int
+    wall_s: float
+    cp_stats: Dict
+    restarted_at: int
+
+
+def run_lanczos(
+    cfg: GrapheneConfig,
+    n_iter: int = 300,
+    cp_freq: int = 0,               # 0 = no checkpointing
+    cp_name: str = "lanczos",
+    comm=None,
+    env=None,
+    fail_at: Optional[int] = None,  # raise after this iteration (tests)
+    extra_work_s: float = 0.0,      # pad per-iteration compute (benchmarks)
+) -> LanczosResult:
+    """Plain 3-term Lanczos for the extremal eigenvalue of H.
+
+    With ``cp_freq`` > 0, the Lanczos state (v_prev, v_cur, α, β, iter) is a
+    CRAFT checkpoint — exactly the paper's benchmark setup.
+    """
+    eps = onsite(cfg)
+    mv = jax.jit(lambda p: matvec(cfg, eps, p))
+
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    v0 = jax.random.normal(key, (cfg.nx, cfg.ny, 2), jnp.float32)
+    v_cur, _ = _normalize(v0)
+    v_prev = jnp.zeros_like(v_cur)
+
+    state = {
+        "v_prev": Box(v_prev),
+        "v_cur": Box(v_cur),
+        "alphas": np.zeros(n_iter, np.float64),
+        "betas": np.zeros(n_iter + 1, np.float64),
+        "it": Box(0),
+    }
+    cp = None
+    restarted_at = 0
+    if cp_freq:
+        cp = Checkpoint(cp_name, comm, env=env)
+        for k, v in state.items():
+            cp.add(k, v)
+        cp.commit()
+        if cp.restart_if_needed():
+            restarted_at = state["it"].value
+
+    @jax.jit
+    def step(v_prev, v_cur, beta):
+        w = mv(v_cur)
+        alpha = jnp.sum(w * v_cur)
+        w = w - alpha * v_cur - beta * v_prev
+        beta_new = jnp.sqrt(jnp.sum(w * w))
+        v_new = w / jnp.where(beta_new == 0, 1.0, beta_new)
+        return alpha, beta_new, v_cur, v_new
+
+    t0 = time.perf_counter()
+    it = state["it"].value
+    while it < n_iter:
+        alpha, beta, vp, vc = step(
+            state["v_prev"].value, state["v_cur"].value,
+            jnp.float32(state["betas"][it]))
+        state["alphas"][it] = float(alpha)
+        state["betas"][it + 1] = float(beta)
+        state["v_prev"].value = vp
+        state["v_cur"].value = vc
+        it += 1
+        state["it"].value = it
+        if extra_work_s:
+            time.sleep(extra_work_s)
+        if cp is not None:
+            cp.update_and_write(it, cp_freq)
+        if fail_at is not None and it == fail_at:
+            if cp is not None:
+                cp.wait()
+                cp.close()
+            raise RuntimeError(f"injected failure at iteration {it}")
+    wall = time.perf_counter() - t0
+    stats = dict(cp.stats) if cp is not None else {}
+    if cp is not None:
+        cp.wait()
+        cp.close()
+
+    k = state["it"].value
+    tri = np.diag(state["alphas"][:k])
+    if k > 1:
+        off = state["betas"][1:k]
+        tri += np.diag(off, 1) + np.diag(off, -1)
+    eig = float(np.min(np.linalg.eigvalsh(tri))) if k else float("nan")
+    return LanczosResult(
+        eigenvalue=eig, alphas=state["alphas"][:k], betas=state["betas"][:k],
+        iterations=k, wall_s=wall, cp_stats=stats, restarted_at=restarted_at)
+
+
+def reference_eigenvalue(cfg: GrapheneConfig) -> float:
+    """Dense reference for small lattices (tests)."""
+    n = cfg.n
+    eps = np.asarray(onsite(cfg)).reshape(-1)
+    H = np.zeros((n, n), np.float64)
+    basis = np.eye(n, dtype=np.float32)
+    eps_j = jnp.asarray(np.asarray(onsite(cfg)))
+    for j in range(n):
+        psi = jnp.asarray(basis[j].reshape(cfg.nx, cfg.ny, 2))
+        H[:, j] = np.asarray(matvec(cfg, eps_j, psi)).reshape(-1)
+    del eps
+    return float(np.min(np.linalg.eigvalsh(H)))

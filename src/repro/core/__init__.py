@@ -1,0 +1,28 @@
+"""CRAFT core: application-level checkpoint/restart + automatic fault
+tolerance (the paper's contribution as a composable library).
+
+Public surface:
+    Checkpoint, Box           — paper Listing 2 API
+    CpBase, register_adapter  — extension mechanism (paper §2.3)
+    aft_zone, AftZone         — AFT_BEGIN/AFT_END analog (paper §3)
+    FTComm + backends         — ULFM-semantics communicator
+    CraftEnv                  — paper Table 2 environment variables
+"""
+from repro.core.aft import AftAbortedError, AftZone, aft_zone
+from repro.core.checkpoint import Checkpoint
+from repro.core.checkpointables import (
+    Box, FuncCp, JaxArrayCp, NdArrayCp, PodCp, PytreeCp, register_adapter,
+)
+from repro.core.comm import (
+    CommError, FTComm, NullComm, ProcFailedError, RevokedError,
+)
+from repro.core.cpbase import CheckpointError, CpBase, IOContext
+from repro.core.env import CraftEnv
+
+__all__ = [
+    "AftAbortedError", "AftZone", "aft_zone",
+    "Checkpoint", "Box", "FuncCp", "JaxArrayCp", "NdArrayCp", "PodCp",
+    "PytreeCp", "register_adapter",
+    "CommError", "FTComm", "NullComm", "ProcFailedError", "RevokedError",
+    "CheckpointError", "CpBase", "IOContext", "CraftEnv",
+]

@@ -1,0 +1,95 @@
+"""Asynchronous checkpoint writing (paper §2.4).
+
+The paper dedicates one writer thread per process (``std::async``) with two
+modes:
+
+* **copy-based** (``CRAFT_WRITE_ASYNC=1``): ``update()`` snapshots each
+  checkpointable into a private buffer, then file IO runs on the writer
+  thread while the application keeps computing.
+* **zero-copy** (``CRAFT_WRITE_ASYNC_ZERO_COPY=1``): no snapshot; the writer
+  thread serializes the *live* data, and the application must call
+  ``Checkpoint.wait()`` before mutating it.
+
+``CRAFT_ASYNC_THREAD_PIN_CPULIST`` pins the writer thread (paper: maximize
+async gain by keeping the writer off the compute cores).  On Linux we honor it
+via ``os.sched_setaffinity`` on the writer thread's TID; elsewhere it is a
+documented no-op.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import queue
+from typing import Callable, Optional, Sequence
+
+
+class AsyncWriter:
+    """A dedicated writer thread executing checkpoint jobs in order."""
+
+    def __init__(self, pin_cpulist: Sequence[int] = (), name: str = "craft-writer"):
+        self._queue: "queue.Queue" = queue.Queue()
+        self._pin = tuple(pin_cpulist)
+        self._error: Optional[BaseException] = None
+        self._pending = 0
+        self._cv = threading.Condition()
+        self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
+        self._started = False
+
+    # -- lifecycle -----------------------------------------------------------
+    def _ensure_started(self) -> None:
+        if not self._started:
+            self._thread.start()
+            self._started = True
+
+    def _loop(self) -> None:
+        if self._pin and hasattr(os, "sched_setaffinity"):
+            try:
+                os.sched_setaffinity(0, set(self._pin))
+            except OSError:
+                pass  # CPU list not available on this host — documented no-op
+        while True:
+            job = self._queue.get()
+            if job is None:
+                return
+            try:
+                job()
+            except BaseException as exc:  # surfaced at next wait()/submit()
+                with self._cv:
+                    self._error = exc
+            finally:
+                with self._cv:
+                    self._pending -= 1
+                    self._cv.notify_all()
+
+    # -- API -------------------------------------------------------------------
+    def submit(self, job: Callable[[], None]) -> None:
+        self._raise_pending_error()
+        self._ensure_started()
+        with self._cv:
+            self._pending += 1
+        self._queue.put(job)
+
+    def wait(self) -> None:
+        """Block until all submitted jobs finished; re-raise writer errors."""
+        with self._cv:
+            while self._pending > 0:
+                self._cv.wait()
+        self._raise_pending_error()
+
+    def close(self) -> None:
+        if self._started:
+            self.wait()
+            self._queue.put(None)
+            self._thread.join(timeout=30)
+            self._started = False
+
+    @property
+    def busy(self) -> bool:
+        with self._cv:
+            return self._pending > 0
+
+    def _raise_pending_error(self) -> None:
+        with self._cv:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err

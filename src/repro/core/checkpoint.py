@@ -1,0 +1,329 @@
+"""The ``Checkpoint`` class — CRAFT's user-facing CR interface (paper §2.2).
+
+Life cycle (paper Listing 2):
+
+    cp = Checkpoint("myCP", comm)          # directories named by cpName
+    cp.add("iteration", it_box)            # gather checkpointables
+    cp.add("params", params_box)
+    cp.commit()                            # freeze — no further add()
+    cp.restart_if_needed()                 # read latest version, if any
+    while ...:
+        ...
+        cp.update_and_write(iteration, cp_freq)   # write every cp_freq iters
+
+Tiers: every write lands on the **node tier** (fast node-local storage with
+partner/XOR redundancy — the SCR analog) when enabled, and every
+``pfs_every``-th version additionally lands on the **PFS tier** (the durable
+parallel file system).  ``disable_node_level()`` is the paper's
+``disableSCR()``.
+
+Asynchrony (paper §2.4): with ``CRAFT_WRITE_ASYNC=1`` the device→host
+snapshot (``update()``) happens inline and the file IO runs on a dedicated
+writer thread; with ``CRAFT_WRITE_ASYNC_ZERO_COPY=1`` even the snapshot runs
+on the writer thread and the caller must ``wait()`` before mutating the data.
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.core import checkpointables, nested, storage
+from repro.core.async_writer import AsyncWriter
+from repro.core.comm import ChannelComm, NullComm
+from repro.core.cpbase import CheckpointError, CpBase, IOContext
+from repro.core.env import CraftEnv
+
+
+class Checkpoint:
+    """A named collection of checkpointable objects (paper Fig. 2 ``cpMap``)."""
+
+    def __init__(
+        self,
+        name: str,
+        comm=None,
+        env: Optional[CraftEnv] = None,
+        node_store_factory=None,
+    ):
+        if not name or "/" in name or name.startswith("."):
+            raise ValueError(f"checkpoint name must be a valid directory name: {name!r}")
+        self.name = name
+        base_comm = comm if comm is not None else NullComm()
+        # All checkpoint coordination runs on a dedicated collective channel
+        # so writer-thread barriers never interleave with user collectives.
+        self.comm = ChannelComm(base_comm, f"cp:{name}")
+        # paper §4.1: env is read exactly once, at Checkpoint definition
+        self.env = env if env is not None else CraftEnv.capture()
+        self._map: Dict[str, CpBase] = {}
+        self._committed = False
+        self._closed = False
+        self._version = 0                     # in-memory CP-version counter
+        self._node_enabled = self.env.use_node_level
+        self._node_store_factory = node_store_factory
+        self._pfs: Optional[storage.VersionStore] = None
+        self._node = None
+        self._writer: Optional[AsyncWriter] = None
+        self.stats = {
+            "writes": 0,
+            "node_writes": 0,
+            "pfs_writes": 0,
+            "bytes_written": 0,
+            "write_seconds": 0.0,
+            "reads": 0,
+            "read_seconds": 0.0,
+        }
+
+    # ------------------------------------------------------------------ add
+    def add(self, key: str, obj, **kw) -> None:
+        """Register a checkpointable under ``key`` (paper's overloaded add())."""
+        if self._committed:
+            raise CheckpointError(
+                f"Checkpoint {self.name!r} is committed — add() is frozen "
+                "(create a new Checkpoint for additional data, paper §2.2)"
+            )
+        if not key or "/" in key or key.startswith("."):
+            raise ValueError(f"checkpoint key must be a valid file name: {key!r}")
+        if key in self._map:
+            raise CheckpointError(f"duplicate checkpoint key {key!r}")
+        self._map[key] = checkpointables.wrap(obj, **kw)
+
+    # --------------------------------------------------------------- commit
+    def commit(self) -> None:
+        if self._committed:
+            raise CheckpointError(f"Checkpoint {self.name!r} already committed")
+        if not self._map:
+            raise CheckpointError(f"Checkpoint {self.name!r} has no data")
+        self._committed = True
+        if not self.env.enable:
+            return
+        self._pfs = storage.VersionStore(
+            self.env.cp_path,
+            self.name,
+            keep_versions=self.env.keep_versions,
+            comm=self.comm,
+        )
+        if self._node_enabled and self._node_store_factory is not None:
+            self._node = self._node_store_factory(self)
+        elif self._node_enabled and self.env.node_cp_path is not None:
+            from repro.core.node_level import NodeStore
+
+            self._node = NodeStore(
+                base=self.env.node_cp_path,
+                name=self.name,
+                comm=self.comm,
+                env=self.env,
+            )
+        if self.env.write_async or self.env.write_async_zero_copy:
+            self._writer = AsyncWriter(
+                pin_cpulist=self.env.async_thread_pin_cpulist,
+                name=f"craft-writer-{self.name}",
+            )
+
+    # ----------------------------------------------------- nested (subCP())
+    def sub_cp(self, child: "Checkpoint") -> None:
+        """Declare ``child`` a nested checkpoint of ``self`` (paper §2.5)."""
+        nested.GLOBAL_REGISTRY.link(self, child)
+
+    def disable_node_level(self) -> None:
+        """Keep this checkpoint off the node tier (paper ``disableSCR()``)."""
+        if self._committed:
+            raise CheckpointError("disable_node_level() must precede commit()")
+        self._node_enabled = False
+
+    def invalidate(self) -> None:
+        """Wipe every stored version of this checkpoint (nested-child wipe)."""
+        if self._pfs is not None:
+            self._pfs.invalidate_all()
+        if self._node is not None:
+            self._node.invalidate_all()
+
+    # ---------------------------------------------------------------- write
+    def update_and_write(
+        self, iteration: Optional[int] = None, cp_freq: int = 1
+    ) -> bool:
+        """Write a new checkpoint version if ``iteration % cp_freq == 0``.
+
+        Returns True when a version was (or began being) written.
+        """
+        self._require_committed()
+        if not self.env.enable:
+            return False
+        if iteration is not None and cp_freq > 1 and iteration % cp_freq != 0:
+            return False
+        version = self._version + 1
+
+        if self._writer is not None and self.env.write_async_zero_copy:
+            # zero-copy: snapshot *and* IO on the writer thread; the caller
+            # must wait() before mutating live data (paper §2.4).
+            self._writer.submit(lambda v=version: self._snapshot_and_write(v))
+        elif self._writer is not None:
+            # copy-based: snapshot inline (cheap D2H), IO on writer thread.
+            self._update_all()
+            self._writer.submit(lambda v=version: self._write_version(v))
+        else:
+            self._update_all()
+            self._write_version(version)
+        self._version = version
+        return True
+
+    def _update_all(self) -> None:
+        for item in self._map.values():
+            item.update()
+
+    def _snapshot_and_write(self, version: int) -> None:
+        self._update_all()
+        self._write_version(version)
+
+    def _write_version(self, version: int) -> None:
+        t0 = time.perf_counter()
+        wrote_bytes = sum(item.nbytes() for item in self._map.values())
+        to_pfs = (
+            self._node is None
+            or self.env.pfs_every <= 1
+            or version % self.env.pfs_every == 0
+        )
+        if self._node is not None:
+            self._write_to_store(self._node, version)
+            self.stats["node_writes"] += 1
+        if to_pfs:
+            self._write_to_store(self._pfs, version)
+            self.stats["pfs_writes"] += 1
+        # Parent published ⇒ children are now inconsistent (paper Table 1).
+        nested.GLOBAL_REGISTRY.invalidate_children(self)
+        self.stats["writes"] += 1
+        self.stats["bytes_written"] += wrote_bytes
+        self.stats["write_seconds"] += time.perf_counter() - t0
+
+    def _write_to_store(self, store, version: int) -> None:
+        staged = store.stage(version)
+        try:
+            checksums: dict = {}
+            ctx = IOContext(
+                proc_rank=self.comm.rank,
+                proc_count=self.comm.size,
+                compress=self.env.compress,
+                checksum=self.env.checksum,
+                checksum_db=checksums,
+            )
+            for key, item in self._map.items():
+                sub = staged / key
+                sub.mkdir(parents=True, exist_ok=True)
+                item.write(sub, ctx)
+            store.publish(staged, version, extra_meta={"keys": sorted(self._map)})
+        except BaseException:
+            store.abort(staged)
+            raise
+
+    # ----------------------------------------------------------------- read
+    def restart_if_needed(self, iteration_box=None) -> bool:
+        """Restore the latest consistent version, if any (paper Listing 2).
+
+        Nested semantics (paper §2.5): a non-zero in-memory CP-version means
+        this is a successive (inner-loop) call of an already-running program —
+        return immediately without reading.
+
+        ``iteration_box`` is accepted for signature parity with the paper's
+        ``restartIfNeeded(&iteration)``; the iteration should normally simply
+        be one of the added checkpointables.
+        """
+        self._require_committed()
+        if not self.env.enable or not self.env.read_cp_on_restart:
+            return False
+        if self._version != 0:
+            return False  # successive nested-loop call — not a restart
+        version = self._agree_version()
+        if version <= 0:
+            return False
+        t0 = time.perf_counter()
+        self._read_version(version)
+        self._version = version
+        self.stats["reads"] += 1
+        self.stats["read_seconds"] += time.perf_counter() - t0
+        return True
+
+    def _agree_version(self) -> int:
+        """All processes must restore the same version: min over latests."""
+        local = 0
+        if self._node is not None:
+            local = max(local, self._node.latest_version())
+        if self._pfs is not None:
+            local = max(local, self._pfs.latest_version())
+        return self.comm.allreduce_min(local)
+
+    def _read_version(self, version: int) -> None:
+        ctx = IOContext(
+            proc_rank=self.comm.rank,
+            proc_count=self.comm.size,
+            compress=self.env.compress,
+            checksum=self.env.checksum,
+        )
+        errors = []
+        for store, label in ((self._node, "node"), (self._pfs, "pfs")):
+            if store is None:
+                continue
+            vdir = store.version_dir(version)
+            if label == "node":
+                try:
+                    # may trigger partner/XOR recovery; an unrecoverable
+                    # node tier (multi-failure) falls through to the PFS
+                    vdir = store.materialize(version)
+                except CheckpointError as exc:
+                    errors.append(f"{label}: {exc}")
+                    continue
+            if vdir is None or not Path(vdir).is_dir():
+                errors.append(f"{label}: version v-{version} not present")
+                continue
+            try:
+                for key, item in self._map.items():
+                    item.read(Path(vdir) / key, ctx)
+                return
+            except CheckpointError as exc:
+                errors.append(f"{label}: {exc}")
+        raise CheckpointError(
+            f"could not restore {self.name!r} v-{version}: " + "; ".join(errors)
+        )
+
+    # ----------------------------------------------------------------- misc
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def committed(self) -> bool:
+        return self._committed
+
+    def keys(self):
+        return sorted(self._map)
+
+    def nbytes(self) -> int:
+        return sum(item.nbytes() for item in self._map.values())
+
+    def wait(self) -> None:
+        """Fence for asynchronous writes (paper ``Checkpoint::wait()``)."""
+        if self._writer is not None:
+            self._writer.wait()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        if self._writer is not None:
+            self._writer.close()
+        self._closed = True
+
+    def __enter__(self) -> "Checkpoint":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # pragma: no cover
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _require_committed(self) -> None:
+        if not self._committed:
+            raise CheckpointError(
+                f"Checkpoint {self.name!r} not committed — call commit() first"
+            )

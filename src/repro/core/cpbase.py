@@ -1,0 +1,77 @@
+"""CpBase — the extension point of the CRAFT checkpoint library.
+
+The paper's design (Fig. 2): every checkpointable data type derives from a
+base class with three pure-virtual functions, ``read()``, ``write()`` and
+``update()``.  The ``Checkpoint`` class holds a map of named CpBase objects
+and drives those three calls.
+
+JAX adaptation: ``update()`` is where device state becomes host state — for a
+``jax.Array`` it snapshots the addressable shards (device→host DMA overlaps
+with subsequent compute on TPU).  ``write()``/``read()`` are pure host-side
+file IO and can therefore run on the asynchronous writer thread.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from pathlib import Path
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class IOContext:
+    """Context threaded through every read/write call.
+
+    ``proc_rank`` / ``proc_count`` identify the writing process (paper: rank
+    embedded in process-local file names); ``compress``/``checksum`` select the
+    codec, and ``checksum_db`` collects per-file digests for the manifest.
+    """
+
+    proc_rank: int = 0
+    proc_count: int = 1
+    compress: str = "none"          # none | zstd
+    checksum: str = "crc32"         # crc32 | none
+    checksum_db: Optional[dict] = None   # filled at write, verified at read
+    # Restore-time hook: maps a stored global numpy array onto the live
+    # sharding/topology (elastic restore).  Installed by jax-aware types.
+    device_put: Optional[Callable] = None
+
+    def record_checksum(self, rel_name: str, digest: int) -> None:
+        if self.checksum_db is not None:
+            self.checksum_db[rel_name] = digest
+
+
+class CpBase(abc.ABC):
+    """Base class of every checkpointable data type (paper Fig. 2).
+
+    Subclasses implement:
+      * ``update()`` — refresh the internal write-buffer from the live data
+        (only used for copy-based asynchronous checkpointing; synchronous
+        writes may fold this into ``write()``).
+      * ``write(dir_path, ctx)`` — serialize the buffer into ``dir_path``.
+      * ``read(dir_path, ctx)`` — restore the live data from ``dir_path``.
+    """
+
+    #: When True the object snapshots into a private buffer on ``update()``
+    #: so the live data can be mutated while the writer thread runs.
+    needs_copy_for_async: bool = True
+
+    @abc.abstractmethod
+    def update(self) -> None:
+        """Snapshot live data into the write buffer (async copy mode)."""
+
+    @abc.abstractmethod
+    def write(self, dir_path: Path, ctx: IOContext) -> None:
+        """Serialize the (buffered) data under ``dir_path``."""
+
+    @abc.abstractmethod
+    def read(self, dir_path: Path, ctx: IOContext) -> None:
+        """Restore live data from ``dir_path`` (raises on missing/corrupt)."""
+
+    def nbytes(self) -> int:
+        """Approximate checkpoint payload size (for tier policy / stats)."""
+        return 0
+
+
+class CheckpointError(RuntimeError):
+    """Raised on unreadable / corrupt / inconsistent checkpoint data."""

@@ -1,0 +1,57 @@
+"""Elastic remesh: shrink-recovery resharding (beyond-paper, DESIGN.md §2).
+
+The paper's shrinking recovery leaves domain redistribution to the user.
+Here the checkpoint manifest is topology-independent (shard files + global
+indices), so after a shrink the framework itself can rebuild a smaller mesh
+and restore the same global state resharded — "the user redistributes the
+domain" done automatically.
+
+The data-parallel axis absorbs the shrink (every DP slice holds a full
+model replica group, so dropping DP slices never strands a weight shard);
+the model axis is preserved.  ``shrink_mesh`` computes the largest valid
+mesh for the surviving host count; ``reshard`` moves a live pytree onto it.
+A restore-from-checkpoint needs no special code at all: build the state on
+the new mesh and ``Checkpoint.restart_if_needed()`` — the checkpointables
+``device_put`` every leaf onto the live (new-mesh) sharding.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.logical import LogicalRules, shard_specs
+
+
+def shrink_mesh(n_devices: int, model_parallel: int,
+                axis_names: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    """Largest (data, model) mesh with the given TP degree that fits
+    ``n_devices`` devices.  Raises if fewer than one model group survives."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot hold one {model_parallel}-way "
+            "model-parallel group — shrink recovery impossible; use "
+            "non-shrinking recovery with spare nodes instead")
+    data = n_devices // model_parallel
+    devs = jax.devices()[: data * model_parallel]
+    import numpy as np
+
+    arr = np.array(devs).reshape(data, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+def reshard(tree, logical_tree, new_mesh: Mesh,
+            rules: Optional[LogicalRules] = None):
+    """Move a live pytree onto ``new_mesh`` under the same logical rules."""
+    rules = rules or LogicalRules(new_mesh)
+    specs = shard_specs(rules, logical_tree, tree)
+    return jax.tree_util.tree_map(
+        lambda x, sp: jax.device_put(x, NamedSharding(new_mesh, sp)),
+        tree, specs,
+        is_leaf=lambda x: isinstance(x, jax.Array)), specs
+
+
+def dp_degree(mesh: Mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("data", 1) * sizes.get("pod", 1)

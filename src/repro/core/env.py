@@ -1,0 +1,98 @@
+"""CRAFT environment variables (paper Table 2), with read-once semantics.
+
+The paper reads these variables exactly once — either at the definition of a
+``Checkpoint`` object or at the start of an AFT zone — so changing them mid-run
+has no effect.  We mirror that: ``CraftEnv.capture()`` snapshots the
+environment; each ``Checkpoint`` / AFT zone stores its own snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from pathlib import Path
+from typing import Optional
+
+# Paper Table 2 names.  CRAFT_USE_SCR is kept as an alias for the node-level
+# tier toggle (SCR is the paper's node-level backend; ours is built in).
+_TRUE = {"1", "true", "yes", "on"}
+_FALSE = {"0", "false", "no", "off"}
+
+
+def _bool(env: dict, key: str, default: bool) -> bool:
+    raw = env.get(key)
+    if raw is None:
+        return default
+    raw = raw.strip().lower()
+    if raw in _TRUE:
+        return True
+    if raw in _FALSE:
+        return False
+    raise ValueError(f"{key}={raw!r}: expected one of {_TRUE | _FALSE}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CraftEnv:
+    """Snapshot of every CRAFT_* control knob (paper Table 2 + extensions)."""
+
+    # --- paper Table 2 ---------------------------------------------------
+    cp_path: Path                    # CRAFT_CP_PATH        (default: $PWD)
+    enable: bool                     # CRAFT_ENABLE         (default: 1)
+    write_async: bool                # CRAFT_WRITE_ASYNC    (default: 0)
+    write_async_zero_copy: bool      # CRAFT_WRITE_ASYNC_ZERO_COPY (default: 0)
+    async_thread_pin_cpulist: tuple  # CRAFT_ASYNC_THREAD_PIN_CPULIST ("10_20")
+    use_node_level: bool             # CRAFT_USE_SCR / CRAFT_USE_NODE_LEVEL (1)
+    read_cp_on_restart: bool         # CRAFT_READ_CP_ON_RESTART (default: 1)
+    comm_recovery_policy: str        # NON-SHRINKING (default) | SHRINKING
+    comm_spawn_policy: str           # NO-REUSE (default) | REUSE
+    # --- TPU-era extensions (documented in DESIGN.md §2) ------------------
+    node_cp_path: Optional[Path]     # CRAFT_NODE_CP_PATH   (node-tier dir)
+    node_redundancy: str             # CRAFT_NODE_REDUNDANCY: LOCAL|PARTNER|XOR
+    xor_group_size: int              # CRAFT_XOR_GROUP_SIZE (default: 8)
+    pfs_every: int                   # CRAFT_PFS_EVERY: every k-th version also
+                                     # lands on the PFS tier (default: 1)
+    keep_versions: int               # CRAFT_KEEP_VERSIONS (default: 2)
+    compress: str                    # CRAFT_COMPRESS: none|zstd (default none)
+    checksum: str                    # CRAFT_CHECKSUM: crc32|none (default crc32)
+
+    @staticmethod
+    def capture(environ: Optional[dict] = None) -> "CraftEnv":
+        env = dict(os.environ if environ is None else environ)
+        pin_raw = env.get("CRAFT_ASYNC_THREAD_PIN_CPULIST", "").strip()
+        pin = tuple(int(tok) for tok in pin_raw.split("_") if tok) if pin_raw else ()
+        use_node = _bool(env, "CRAFT_USE_SCR", True) and _bool(
+            env, "CRAFT_USE_NODE_LEVEL", True
+        )
+        recovery = env.get("CRAFT_COMM_RECOVERY_POLICY", "NON-SHRINKING").upper()
+        if recovery not in ("NON-SHRINKING", "SHRINKING"):
+            raise ValueError(f"CRAFT_COMM_RECOVERY_POLICY={recovery!r}")
+        spawn = env.get("CRAFT_COMM_SPAWN_POLICY", "NO-REUSE").upper()
+        if spawn not in ("NO-REUSE", "REUSE"):
+            raise ValueError(f"CRAFT_COMM_SPAWN_POLICY={spawn!r}")
+        node_path = env.get("CRAFT_NODE_CP_PATH")
+        redundancy = env.get("CRAFT_NODE_REDUNDANCY", "PARTNER").upper()
+        if redundancy not in ("LOCAL", "PARTNER", "XOR"):
+            raise ValueError(f"CRAFT_NODE_REDUNDANCY={redundancy!r}")
+        compress = env.get("CRAFT_COMPRESS", "none").lower()
+        if compress not in ("none", "zstd"):
+            raise ValueError(f"CRAFT_COMPRESS={compress!r}")
+        checksum = env.get("CRAFT_CHECKSUM", "crc32").lower()
+        if checksum not in ("crc32", "none"):
+            raise ValueError(f"CRAFT_CHECKSUM={checksum!r}")
+        return CraftEnv(
+            cp_path=Path(env.get("CRAFT_CP_PATH", os.getcwd())),
+            enable=_bool(env, "CRAFT_ENABLE", True),
+            write_async=_bool(env, "CRAFT_WRITE_ASYNC", False),
+            write_async_zero_copy=_bool(env, "CRAFT_WRITE_ASYNC_ZERO_COPY", False),
+            async_thread_pin_cpulist=pin,
+            use_node_level=use_node,
+            read_cp_on_restart=_bool(env, "CRAFT_READ_CP_ON_RESTART", True),
+            comm_recovery_policy=recovery,
+            comm_spawn_policy=spawn,
+            node_cp_path=Path(node_path) if node_path else None,
+            node_redundancy=redundancy,
+            xor_group_size=int(env.get("CRAFT_XOR_GROUP_SIZE", "8")),
+            pfs_every=int(env.get("CRAFT_PFS_EVERY", "1")),
+            keep_versions=int(env.get("CRAFT_KEEP_VERSIONS", "2")),
+            compress=compress,
+            checksum=checksum,
+        )

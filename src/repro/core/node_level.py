@@ -1,0 +1,254 @@
+"""Node-level checkpoint tier — the SCR analog (paper §2.4) on TPU hosts.
+
+The paper reduces checkpoint overhead by writing frequent small checkpoints
+to *node-local* storage and only occasionally to the parallel file system;
+SCR adds redundancy so a single node failure does not lose the node-tier
+data: *partner* (full copy on a neighbor) or *partner-XOR* (parity group).
+
+TPU adaptation.  "Node-local" is the host-local SSD/ramdisk of each TPU host.
+Here a node's storage is the directory ``<base>/node-<nid>/`` — in the test
+and benchmark cluster all nodes share one filesystem, so cross-node reads
+stand in for the RDMA/collective transfers a real fleet would use (the
+*compute* of the XOR path is the Pallas ``xor_parity`` kernel either way).
+
+Redundancy policies (``CRAFT_NODE_REDUNDANCY``):
+
+  * ``LOCAL``   — no redundancy; a lost node forces a PFS restore.
+  * ``PARTNER`` — the node leader mirrors the node's version directory onto
+    the next node (paper: "recover restart data from the failed node's
+    neighbor").
+  * ``XOR``     — nodes form groups of ``CRAFT_XOR_GROUP_SIZE``; one member
+    (rotating with the version number, RAID-5 style) stores the XOR parity
+    of every member's payload; any single lost member is rebuilt from the
+    parity + survivors (SCR's partner-XOR level).
+
+Restore goes through :meth:`NodeStore.materialize`, which transparently
+rebuilds a missing local version from the partner mirror or the parity group
+before handing the directory to ``Checkpoint``.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.core import storage
+from repro.core.cpbase import CheckpointError
+from repro.kernels.xor_parity import ops as xor_ops
+
+
+def _node_geometry(comm):
+    ppn = max(1, comm.procs_per_node())
+    n_nodes = (comm.size + ppn - 1) // ppn
+    nid = comm.node_id()
+    leader = comm.rank % ppn == 0
+    return nid, n_nodes, leader
+
+
+class NodeStore:
+    """Node tier for one checkpoint name (same staging API as VersionStore)."""
+
+    def __init__(self, base: Path, name: str, comm, env):
+        self.base = Path(base)
+        self.name = name
+        self.comm = comm
+        self.env = env
+        self.redundancy = env.node_redundancy
+        self.group_size = max(1, env.xor_group_size)
+        self.nid, self.n_nodes, self.is_leader = _node_geometry(comm)
+        self._local = storage.VersionStore(
+            self._node_dir(self.nid), name, keep_versions=env.keep_versions
+        )
+
+    # -- layout ---------------------------------------------------------------
+    def _node_dir(self, nid: int) -> Path:
+        return self.base / f"node-{nid}"
+
+    def _mirror_root(self, owner_nid: int) -> Path:
+        """Where ``owner_nid``'s partner mirror lives (on its neighbor node)."""
+        holder = (owner_nid + 1) % self.n_nodes
+        return self._node_dir(holder) / f"mirror-of-{owner_nid}" / self.name
+
+    def _group(self, nid: int) -> List[int]:
+        g0 = (nid // self.group_size) * self.group_size
+        return [n for n in range(g0, min(g0 + self.group_size, self.n_nodes))]
+
+    def _parity_holder(self, nid: int, version: int) -> int:
+        grp = self._group(nid)
+        return grp[version % len(grp)]
+
+    def _parity_root(self, nid: int, version: int) -> Path:
+        holder = self._parity_holder(nid, version)
+        g0 = self._group(nid)[0]
+        return self._node_dir(holder) / f"xor-group-{g0}" / self.name
+
+    # -- staging API (Checkpoint._write_to_store) ------------------------------
+    def stage(self, version: int) -> Path:
+        return self._local.stage(version)
+
+    def abort(self, staged: Path) -> None:
+        self._local.abort(staged)
+
+    def publish(self, staged: Path, version: int, extra_meta: Optional[dict] = None) -> None:
+        self.comm.barrier()          # all ranks wrote their node-local files
+        if self.is_leader:
+            self._local.publish(staged, version, extra_meta)
+        self.comm.barrier()          # every node's v-<K> is complete
+        if self.is_leader:
+            if self.redundancy == "PARTNER" and self.n_nodes > 1:
+                self._publish_partner(version)
+            elif self.redundancy == "XOR":
+                self._publish_xor(version)
+        self.comm.barrier()          # redundancy data in place
+
+    def _publish_partner(self, version: int) -> None:
+        src = self._local.version_dir(version)
+        root = self._mirror_root(self.nid)
+        root.mkdir(parents=True, exist_ok=True)
+        tmp = root / f".tmp-v-{version}"
+        shutil.rmtree(tmp, ignore_errors=True)
+        shutil.copytree(src, tmp)
+        final = root / f"v-{version}"
+        shutil.rmtree(final, ignore_errors=True)
+        tmp.replace(final)
+        self._retire_tree(root)
+
+    def _publish_xor(self, version: int) -> None:
+        # The parity holder's leader computes the group parity.
+        if self._parity_holder(self.nid, version) != self.nid:
+            return
+        group = self._group(self.nid)
+        payloads: Dict[int, bytes] = {}
+        manifest: Dict[str, dict] = {}
+        for member in group:
+            vdir = storage.VersionStore(
+                self._node_dir(member), self.name, keep_versions=10**9,
+                sweep=False,
+            ).version_dir(version)
+            files = sorted(p for p in vdir.rglob("*") if p.is_file())
+            blob = bytearray()
+            entries = []
+            for p in files:
+                data = p.read_bytes()
+                entries.append({"rel": str(p.relative_to(vdir)), "size": len(data)})
+                blob += data
+            payloads[member] = bytes(blob)
+            manifest[str(member)] = {"files": entries, "size": len(blob)}
+        parity = xor_ops.parity_of_buffers([payloads[m] for m in group])
+        root = self._parity_root(self.nid, version)
+        pdir = root / f"v-{version}"
+        tmp = root / f".tmp-v-{version}"
+        shutil.rmtree(tmp, ignore_errors=True)
+        tmp.mkdir(parents=True)
+        (tmp / "parity.bin").write_bytes(parity)
+        storage.write_json(tmp / "manifest.json", manifest)
+        shutil.rmtree(pdir, ignore_errors=True)
+        tmp.replace(pdir)
+        self._retire_tree(root)
+
+    def _retire_tree(self, root: Path) -> None:
+        vdirs = sorted(
+            (int(p.name[2:]), p) for p in root.glob("v-*") if p.is_dir()
+        )
+        for _, p in vdirs[: -max(1, self.env.keep_versions)]:
+            shutil.rmtree(p, ignore_errors=True)
+
+    # -- reading ----------------------------------------------------------------
+    def latest_version(self) -> int:
+        """Latest version recoverable *for this node* (local or via peers)."""
+        best = self._local.latest_version()
+        if self.redundancy == "PARTNER" and self.n_nodes > 1:
+            root = self._mirror_root(self.nid)
+            for p in root.glob("v-*"):
+                best = max(best, int(p.name[2:]))
+        elif self.redundancy == "XOR":
+            # any version whose parity manifest exists is recoverable
+            for holder in self._group(self.nid):
+                g0 = self._group(self.nid)[0]
+                root = self._node_dir(holder) / f"xor-group-{g0}" / self.name
+                for p in root.glob("v-*"):
+                    if (p / "manifest.json").exists():
+                        best = max(best, int(p.name[2:]))
+        return best
+
+    def version_dir(self, version: int) -> Path:
+        return self._local.version_dir(version)
+
+    def materialize(self, version: int) -> Optional[Path]:
+        """Return a complete local v-<K> dir, recovering it if necessary."""
+        vdir = self._local.version_dir(version)
+        if self._complete(vdir):
+            return vdir
+        try:
+            if self.redundancy == "PARTNER" and self.n_nodes > 1:
+                return self._recover_partner(version)
+            if self.redundancy == "XOR":
+                return self._recover_xor(version)
+        except (OSError, CheckpointError, json.JSONDecodeError) as exc:
+            raise CheckpointError(
+                f"node-tier recovery of {self.name} v-{version} failed: {exc}"
+            ) from exc
+        return None
+
+    def _complete(self, vdir: Path) -> bool:
+        return vdir.is_dir() and any(vdir.iterdir())
+
+    def _recover_partner(self, version: int) -> Optional[Path]:
+        src = self._mirror_root(self.nid) / f"v-{version}"
+        if not src.is_dir():
+            return None
+        dst = self._local.version_dir(version)
+        shutil.rmtree(dst, ignore_errors=True)
+        shutil.copytree(src, dst)
+        return dst
+
+    def _recover_xor(self, version: int) -> Optional[Path]:
+        root = self._parity_root(self.nid, version)
+        pdir = root / f"v-{version}"
+        if not (pdir / "manifest.json").exists():
+            return None
+        manifest = storage.read_json(pdir / "manifest.json")
+        group = self._group(self.nid)
+        my_entry = manifest.get(str(self.nid))
+        if my_entry is None:
+            return None
+        survivors = []
+        for member in group:
+            if member == self.nid:
+                continue
+            vdir = storage.VersionStore(
+                self._node_dir(member), self.name, keep_versions=10**9,
+                sweep=False,
+            ).version_dir(version)
+            blob = bytearray()
+            for ent in manifest[str(member)]["files"]:
+                blob += (vdir / ent["rel"]).read_bytes()
+            if len(blob) != manifest[str(member)]["size"]:
+                raise CheckpointError(
+                    f"survivor node {member} payload size mismatch"
+                )
+            survivors.append(bytes(blob))
+        parity = (pdir / "parity.bin").read_bytes()
+        mine = xor_ops.reconstruct_member(parity, survivors, my_entry["size"])
+        dst = self._local.version_dir(version)
+        shutil.rmtree(dst, ignore_errors=True)
+        offset = 0
+        for ent in my_entry["files"]:
+            out = dst / ent["rel"]
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_bytes(mine[offset : offset + ent["size"]])
+            offset += ent["size"]
+        return dst
+
+    def invalidate_all(self) -> None:
+        self._local.invalidate_all()
+        if self.redundancy == "PARTNER" and self.n_nodes > 1:
+            shutil.rmtree(self._mirror_root(self.nid), ignore_errors=True)
+        elif self.redundancy == "XOR":
+            g0 = self._group(self.nid)[0]
+            for holder in self._group(self.nid):
+                shutil.rmtree(
+                    self._node_dir(holder) / f"xor-group-{g0}" / self.name,
+                    ignore_errors=True,
+                )

@@ -1,0 +1,227 @@
+"""Versioned, atomic checkpoint storage (paper §2.6).
+
+Directory layout (paper Fig. 4):
+
+    <base>/<cpName>/
+        meta.json            -- latest complete version, history, checksums
+        v-<K>/               -- one directory per checkpoint version
+            <key>/...        -- one subdirectory per checkpointable object
+
+Atomicity protocol: a version is staged in ``.tmp-v-<K>-<nonce>/``, every file
+is fsync'd, the directory is atomically renamed to ``v-<K>``, and only then is
+``meta.json`` updated (itself via tmp+rename).  A crash at any point leaves
+either the previous complete version or a garbage ``.tmp-*`` dir that is swept
+on the next run — never a torn checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import uuid
+import zlib
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+try:  # optional transparent compression (beyond-paper extension)
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover
+    _zstd = None
+
+from repro.core.cpbase import CheckpointError, IOContext
+
+_MAGIC = b"CRFT"
+
+
+def _dtype_to_name(dt: np.dtype) -> str:
+    return np.dtype(dt).name  # e.g. "float32", "bfloat16" (ml_dtypes)
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # registered by jax; covers bfloat16 / fp8 etc.
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+# --------------------------------------------------------------------------
+# low-level file codec: length-prefixed numpy buffers with optional zstd +
+# crc32, fsync'd.  One .bin file per array keeps node-tier writes parallel.
+# --------------------------------------------------------------------------
+def write_array(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
+    arr = np.ascontiguousarray(arr)
+    payload = arr.tobytes()
+    if ctx.compress == "zstd":
+        if _zstd is None:  # pragma: no cover
+            raise CheckpointError("CRAFT_COMPRESS=zstd but zstandard missing")
+        payload = _zstd.ZstdCompressor(level=3).compress(payload)
+    header = json.dumps(
+        {
+            "dtype": _dtype_to_name(arr.dtype),
+            "shape": list(arr.shape),
+            "compress": ctx.compress,
+        }
+    ).encode()
+    digest = zlib.crc32(payload) if ctx.checksum == "crc32" else 0
+    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
+    with open(tmp, "wb") as fh:
+        fh.write(_MAGIC)
+        fh.write(len(header).to_bytes(8, "little"))
+        fh.write(header)
+        fh.write(digest.to_bytes(8, "little"))
+        fh.write(payload)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+    ctx.record_checksum(path.name, digest)
+
+
+def read_array(path: Path, ctx: IOContext) -> np.ndarray:
+    if not path.exists():
+        raise CheckpointError(f"missing checkpoint file {path}")
+    with open(path, "rb") as fh:
+        if fh.read(4) != _MAGIC:
+            raise CheckpointError(f"bad magic in {path}")
+        hlen = int.from_bytes(fh.read(8), "little")
+        header = json.loads(fh.read(hlen).decode())
+        digest = int.from_bytes(fh.read(8), "little")
+        payload = fh.read()
+    if ctx.checksum == "crc32" and digest and zlib.crc32(payload) != digest:
+        raise CheckpointError(f"checksum mismatch in {path}")
+    if header["compress"] == "zstd":
+        if _zstd is None:  # pragma: no cover
+            raise CheckpointError("file is zstd-compressed but zstandard missing")
+        payload = _zstd.ZstdDecompressor().decompress(payload)
+    arr = np.frombuffer(bytearray(payload), dtype=_dtype_from_name(header["dtype"]))
+    return arr.reshape(header["shape"])
+
+
+def write_json(path: Path, obj) -> None:
+    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
+    with open(tmp, "w") as fh:
+        json.dump(obj, fh, indent=1)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
+def read_json(path: Path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def fsync_dir(path: Path) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+# --------------------------------------------------------------------------
+# version store
+# --------------------------------------------------------------------------
+class VersionStore:
+    """One checkpoint name's versioned directory tree on one storage tier.
+
+    Multi-process coordination: all processes of ``comm`` share one staging
+    directory per version (deterministic name, rank-distinct file names
+    inside); ``publish()`` barriers, then rank 0 alone performs the atomic
+    rename + metadata commit, then barriers again so no process reads a
+    version before it is complete.
+    """
+
+    def __init__(
+        self, base: Path, name: str, keep_versions: int = 2, comm=None,
+        sweep: bool = True,
+    ):
+        self.root = Path(base) / name
+        self.keep_versions = max(1, keep_versions)
+        self.comm = comm
+        self.root.mkdir(parents=True, exist_ok=True)
+        if sweep and self._rank() == 0:
+            self._sweep_tmp()
+
+    def _rank(self) -> int:
+        return 0 if self.comm is None else self.comm.rank
+
+    def _barrier(self) -> None:
+        if self.comm is not None:
+            self.comm.barrier()
+
+    # -- staging ------------------------------------------------------------
+    def stage(self, version: int) -> Path:
+        tmp = self.root / f".tmp-v-{version}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        return tmp
+
+    def publish(self, staged: Path, version: int, extra_meta: Optional[dict] = None) -> None:
+        self._barrier()  # every process finished writing its files
+        if self._rank() == 0:
+            final = self.root / f"v-{version}"
+            if final.exists():  # re-write of same version (e.g. retry)
+                shutil.rmtree(final)
+            os.replace(staged, final)
+            fsync_dir(self.root)
+            meta = self.meta()
+            versions = sorted(set(meta.get("versions", [])) | {version})
+            meta.update(
+                {
+                    "latest": version,
+                    "versions": versions,
+                    **(extra_meta or {}),
+                }
+            )
+            write_json(self.root / "meta.json", meta)
+            self._retire(versions)
+        self._barrier()  # version visible to everyone from here on
+
+    def abort(self, staged: Path) -> None:
+        shutil.rmtree(staged, ignore_errors=True)
+
+    # -- reading ------------------------------------------------------------
+    def meta(self) -> dict:
+        p = self.root / "meta.json"
+        if p.exists():
+            try:
+                return read_json(p)
+            except (json.JSONDecodeError, OSError):
+                return {}
+        return {}
+
+    def latest_version(self) -> int:
+        """Latest *complete* version, 0 if none (paper: CP-version counter)."""
+        meta = self.meta()
+        for v in sorted(meta.get("versions", []), reverse=True):
+            if (self.root / f"v-{v}").is_dir():
+                return v
+        return 0
+
+    def version_dir(self, version: int) -> Path:
+        return self.root / f"v-{version}"
+
+    # -- invalidation (nested checkpoints, paper §2.5) -----------------------
+    def invalidate_all(self) -> None:
+        meta = self.meta()
+        for v in meta.get("versions", []):
+            shutil.rmtree(self.root / f"v-{v}", ignore_errors=True)
+        meta["versions"] = []
+        meta["latest"] = 0
+        write_json(self.root / "meta.json", meta)
+
+    # -- housekeeping --------------------------------------------------------
+    def _retire(self, versions) -> None:
+        for v in versions[: -self.keep_versions]:
+            shutil.rmtree(self.root / f"v-{v}", ignore_errors=True)
+        kept = versions[-self.keep_versions:]
+        meta = self.meta()
+        meta["versions"] = kept
+        write_json(self.root / "meta.json", meta)
+
+    def _sweep_tmp(self) -> None:
+        for junk in self.root.glob(".tmp-*"):
+            shutil.rmtree(junk, ignore_errors=True)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots CRAFT-JAX optimizes:
+
+* ``xor_parity`` — SCR partner-XOR parity encode/reconstruct (node tier),
+* ``checksum``   — blocked Fletcher-like integrity digest (device-side),
+* ``flash_attention`` — blocked attention for the LM backbones.
+
+Each subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper with backend dispatch) and ``ref.py`` (pure-jnp oracle
+used by the per-kernel allclose tests).
+"""

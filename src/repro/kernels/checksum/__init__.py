@@ -1,0 +1,1 @@
+from repro.kernels.checksum.ops import digest_array, digest_bytes  # noqa: F401

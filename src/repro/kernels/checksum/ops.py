@@ -1,0 +1,45 @@
+"""Public checksum ops: byte-buffer digests with backend dispatch."""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.checksum.kernel import checksum as checksum_pallas
+from repro.kernels.checksum.ref import checksum_ref
+
+_BLOCK_BYTES = 512 * 128 * 4  # block_rows=512 tiles of 128 uint32 lanes
+
+
+def digest_array(x: jnp.ndarray, *, use_pallas: bool = None) -> Tuple[int, int]:
+    """(s1, s2) digest of a 1-D uint32 array (padded to block multiple)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    n = x.shape[0]
+    block_elems = _BLOCK_BYTES // 4
+    pad = (-n) % block_elems
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    if use_pallas:
+        out = checksum_pallas(x)
+    else:
+        out = jax.jit(checksum_ref)(x)
+    s1, s2 = np.asarray(out)
+    return int(s1), int(s2)
+
+
+def digest_bytes(buf: Union[bytes, bytearray, np.ndarray]) -> Tuple[int, int]:
+    """(s1, s2) digest of a raw byte buffer (zero-padded to 4-byte words)."""
+    arr = (
+        np.frombuffer(buf, dtype=np.uint8)
+        if isinstance(buf, (bytes, bytearray))
+        else np.ascontiguousarray(buf).view(np.uint8).ravel()
+    )
+    pad = (-arr.size) % 4
+    if pad:
+        arr = np.concatenate([arr, np.zeros(pad, dtype=np.uint8)])
+    words = arr.view(np.uint32)
+    return digest_array(jnp.asarray(words))

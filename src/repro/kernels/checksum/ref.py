@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the blocked Fletcher-like checksum.
+
+Definition over a uint32 vector ``x`` of length N (mod-2^32 wraparound):
+
+    s1 = sum_i x[i]
+    s2 = sum_i (i + 1) * x[i]
+    digest = (s2 << 32) | s1          (returned as two uint32 words)
+
+Both sums are associative under concatenation:
+    s1 = s1_a + s1_b
+    s2 = s2_a + (s2_b + |a| * s1_b)
+which is what makes the blocked/parallel kernel possible.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def checksum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Return ``[s1, s2]`` as a (2,) uint32 array."""
+    if x.ndim != 1 or x.dtype != jnp.uint32:
+        raise TypeError(f"expected 1-D uint32, got {x.shape} {x.dtype}")
+    idx = (jnp.arange(x.shape[0], dtype=jnp.uint32) + jnp.uint32(1))
+    s1 = jnp.sum(x, dtype=jnp.uint32)
+    s2 = jnp.sum(x * idx, dtype=jnp.uint32)
+    return jnp.stack([s1, s2])

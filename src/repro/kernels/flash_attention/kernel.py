@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: blocked flash attention (forward), online softmax.
+
+TPU mapping (adapted from the CUDA flash-attention blocking to MXU/VMEM):
+
+  * grid = (B, Hq, Lq/bq, Lk/bk) — the last axis iterates sequentially on
+    TPU, so the running max / denominator / output tiles live in VMEM
+    scratch and carry across the k-block sweep of one q block.
+  * q tile (bq, Dqk) and k/v tiles (bk, Dqk)/(bk, Dv) are VMEM-resident;
+    bq = bk = 128 aligns both MXU matmuls ((bq,D)x(D,bk) and (bq,bk)x(bk,Dv))
+    to 128-multiples.
+  * GQA folds into the BlockSpec index maps: query head h reads kv head
+    ``h // group`` — no repeated K/V materialization in HBM.
+  * causal and sliding-window masking are positional; fully-masked k blocks
+    are skipped with ``pl.when`` (their DMA still streams, the FLOPs don't).
+  * fp32 accumulation regardless of input dtype (bf16 in, fp32 softmax).
+
+Memory: scratch = acc (bq, Dv) + m,l (bq, 128) fp32 ≈ 128·(128+256)·4 ≈
+0.2 MiB; tiles ≈ 3·128·D·2 ≈ 0.2 MiB at D=256 — comfortably inside VMEM
+with room for double-buffered pipelining.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, bq: int, bk: int, n_k: int, causal: bool, window: Optional[int],
+    sm_scale: float, q_offset: int, kv_len: int,
+):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    iq = pl.program_id(2)
+    q_start = q_offset + iq * bq
+    k_start = ik * bk
+    # block-level skip tests (static shapes, dynamic start indices)
+    live = k_start < kv_len
+    if causal:
+        live &= k_start <= q_start + (bq - 1)
+    if window is not None:
+        live &= (k_start + bk - 1) > (q_start - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, Dqk)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, Dqk)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * sm_scale                                    # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...][:, :1]                      # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_new = alpha * l_scr[...][:, :1] + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                               # (bq, Dv)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == n_k - 1)
+    def _finish():
+        l = l_scr[...][:, :1]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "sm_scale", "q_offset", "kv_len",
+        "bq", "bk", "interpret",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,                    # (B, Hq, Lq, Dqk)
+    k: jnp.ndarray,                    # (B, Hkv, Lk, Dqk)
+    v: jnp.ndarray,                    # (B, Hkv, Lk, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    kv_len: Optional[int] = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, lq, dqk = q.shape
+    _, hkv, lk, dv = v.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    if lq % bq or lk % bk:
+        raise ValueError(
+            f"Lq={lq}, Lk={lk} must be multiples of bq={bq}, bk={bk} "
+            "(ops.py pads)"
+        )
+    if sm_scale is None:
+        sm_scale = dqk ** -0.5
+    if kv_len is None:
+        kv_len = lk
+    n_k = lk // bk
+    grid = (b, hq, lq // bq, n_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        bq=bq, bk=bk, n_k=n_k, causal=causal, window=window,
+        sm_scale=float(sm_scale), q_offset=int(q_offset), kv_len=int(kv_len),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dqk), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, bk, dqk),
+                lambda b_, h, i, j, g=group: (b_, h // g, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bk, dv),
+                lambda b_, h, i, j, g=group: (b_, h // g, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dv), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, lq, dv), q.dtype),
+        scratch_shapes=[
+            _vmem((bq, _LANES), jnp.float32),   # running row-max m
+            _vmem((bq, _LANES), jnp.float32),   # running denominator l
+            _vmem((bq, dv), jnp.float32),       # fp32 output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

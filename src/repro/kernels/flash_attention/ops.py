@@ -1,0 +1,112 @@
+"""Public attention op: padding, backend dispatch, and training gradients.
+
+``attention()`` is what the model code calls.  Dispatch:
+
+  * **TPU**: the Pallas flash kernel (forward) wrapped in ``jax.custom_vjp``
+    whose backward recomputes through the jnp reference — the standard
+    recompute-in-backward trade (flash forward saves the O(L²) HBM round
+    trip; backward re-derives the scores from the residual q/k/v).
+  * **CPU / dry-run**: the jitted jnp reference (the interpreter would be
+    Python-speed; the reference compiles to the same FLOPs).
+
+Padding: Lq/Lk are padded up to the 128-lane block size and the result is
+sliced back; padded key slots are excluded via ``kv_len`` masking.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _flash
+from repro.kernels.flash_attention.ref import attention_ref
+
+_BLOCK = 128
+
+
+def _pad_len(n: int, block: int = _BLOCK) -> int:
+    return ((n + block - 1) // block) * block
+
+
+def _padded_flash(q, k, v, *, causal, window, sm_scale, q_offset, interpret):
+    b, hq, lq, dqk = q.shape
+    _, hkv, lk, dv = v.shape
+    lq_p, lk_p = _pad_len(lq), _pad_len(lk)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lq_p - lq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, lk_p - lk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, lk_p - lk), (0, 0)))
+    out = _flash(
+        qp, kp, vp,
+        causal=causal, window=window, sm_scale=sm_scale,
+        q_offset=q_offset, kv_len=lk, interpret=interpret,
+    )
+    return out[:, :, :lq, :]
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def _attention_trainable(q, k, v, causal, window, sm_scale, q_offset, interpret):
+    return _padded_flash(
+        q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+        q_offset=q_offset, interpret=interpret,
+    )
+
+
+def _attn_fwd(q, k, v, causal, window, sm_scale, q_offset, interpret):
+    out = _attention_trainable(q, k, v, causal, window, sm_scale, q_offset, interpret)
+    return out, (q, k, v)
+
+
+def _attn_bwd(causal, window, sm_scale, q_offset, interpret, res, g):
+    q, k, v = res
+    # Recompute through the reference (fp32 softmax) for exact gradients.
+    def f(q_, k_, v_):
+        return attention_ref(
+            q_, k_, v_, causal=causal, window=window,
+            sm_scale=sm_scale, q_offset=q_offset,
+        )
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+_attention_trainable.defvjp(_attn_fwd, _attn_bwd)
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    block: int = 1024,
+) -> jnp.ndarray:
+    """Multi-head attention (GQA-aware).
+
+    Dispatch: TPU → Pallas flash forward (jnp blocked backward);
+    other backends → the jnp blocked (flash-algorithm) path, which keeps
+    HLO memory O(L·D) like the kernel.  ``interpret=True`` forces the
+    Pallas kernel through the interpreter (kernel tests only).
+    """
+    from repro.kernels.flash_attention.blocked import blocked_attention
+
+    if sm_scale is None:
+        sm_scale = q.shape[-1] ** -0.5
+    if interpret:
+        return _attention_trainable(
+            q, k, v, causal, window, float(sm_scale), int(q_offset), True
+        )
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return blocked_attention(
+        q, k, v, causal, window, float(sm_scale), int(q_offset), None,
+        min(block, k.shape[2]), bool(use_pallas),
+    )

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for blocked (flash) attention.
+
+Plain materialized-scores attention with fp32 softmax. Supports:
+  * GQA — ``Hq`` a multiple of ``Hkv`` (query heads grouped over kv heads),
+  * causal masking with a query position offset (decode / chunked prefill),
+  * sliding-window attention (h2o-danube's SWA) — key positions in
+    ``(q_pos - window, q_pos]``,
+  * a ``kv_len`` bound so padded key slots never attend.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,                    # (B, Hq, Lq, Dqk)
+    k: jnp.ndarray,                    # (B, Hkv, Lk, Dqk)
+    v: jnp.ndarray,                    # (B, Hkv, Lk, Dv)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    q_offset: int = 0,
+    kv_len: Optional[int] = None,
+) -> jnp.ndarray:
+    b, hq, lq, dqk = q.shape
+    _, hkv, lk, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = dqk ** -0.5
+    # (B, Hkv, G, Lq, Lk)
+    qg = q.reshape(b, hkv, group, lq, dqk)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    qpos = q_offset + jnp.arange(lq)[:, None]          # (Lq, 1)
+    kpos = jnp.arange(lk)[None, :]                     # (1, Lk)
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, p / jnp.where(denom == 0, 1.0, denom), 0.0)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, lq, v.shape[-1]).astype(q.dtype)

@@ -1,0 +1,1 @@
+"""Pallas selective-scan (mamba recurrence) kernel + ops + reference."""

@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: fused selective scan (the mamba recurrence).
+
+    h_t = exp(dt_t · A) ⊙ h_{t-1} + (dt_t·x_t) ⊗ B_t
+    y_t = ⟨h_t, C_t⟩_state
+
+TPU mapping (DESIGN.md: the CUDA selective-scan kernel's core insight —
+*never let the (L, state) tensors touch HBM* — transplanted to the
+VMEM/VPU hierarchy):
+
+  * mamba2 (SSD) layout: grid = (B, n_heads, L/blk); the last axis iterates
+    sequentially on TPU, so the (hd, st) fp32 state lives in VMEM scratch
+    and carries across the L-sweep of one (batch, head).  Each step streams
+    a (blk, hd) x-tile and (blk, st) B/C tiles in, runs the recurrence as a
+    ``fori_loop`` over the block's timesteps on the VPU, and writes only the
+    (blk, hd) y-tile back — HBM IO is exactly the kernel boundary the
+    roofline's ``pallas_equiv_ssm`` scope charges.
+  * mamba1 layout: per-channel A (di, st) — grid = (B, di/blk_d, L/blk),
+    state scratch (blk_d, st), decay exp(dt_t ⊗ A-tile) computed per step.
+  * VMEM budget at defaults (blk=128, hd=64, st≤128): tiles ≈ blk·(hd+2·st)·4
+    ≈ 0.2 MiB + state ≈ 32 KiB — double-buffered comfortably.
+
+The sequential fori_loop form favors clarity over MXU utilization; the
+matmul-form SSD (chunked attention-like) variant is the known next step and
+is what the roofline's compute term would want — noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ===================================================================== mamba2
+def _ssd_kernel(dtx_ref, bh_ref, ch_ref, dt_ref, a_ref, h0_ref, y_ref,
+                hlast_ref, h_scr, *, blk: int, n_blk: int):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    a = a_ref[0]                                   # scalar decay rate A_h
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, 0]                     # scalar Δ_t
+        decay = jnp.exp(dt_t * a)
+        dtx_t = dtx_ref[0, t, 0].astype(jnp.float32)      # (hd,)
+        b_t = bh_ref[0, t, 0].astype(jnp.float32)         # (st,)
+        c_t = ch_ref[0, t, 0].astype(jnp.float32)         # (st,)
+        h = decay * h + dtx_t[:, None] * b_t[None, :]     # (hd, st)
+        y_ref[0, t, 0] = (h * c_t[None, :]).sum(axis=1).astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, blk, step, h_scr[...])
+
+    @pl.when(ib == n_blk - 1)
+    def _finish():
+        hlast_ref[0, 0] = h_scr[...].astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def ssd_scan(dtx, bh, ch, dt, A, h0, *, blk: int = 128,
+             interpret: bool = False):
+    """mamba2 selective scan.
+
+    dtx: (B, L, nh, hd); bh/ch: (B, L, nh, st); dt: (B, L, nh); A: (nh,);
+    h0: (B, nh, hd, st).  L must be a multiple of ``blk`` (callers pad —
+    dt=0 padding is exact: decay=1, injection=0).
+    Returns (y (B, L, nh, hd), h_last (B, nh, hd, st)).
+    """
+    b, l, nh, hd = dtx.shape
+    st = bh.shape[-1]
+    if l % blk:
+        raise ValueError(f"L={l} not a multiple of blk={blk}")
+    n_blk = l // blk
+    grid = (b, nh, n_blk)
+    kernel = functools.partial(_ssd_kernel, blk=blk, n_blk=n_blk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk, 1, hd), lambda b_, h, i: (b_, i, h, 0)),
+            pl.BlockSpec((1, blk, 1, st), lambda b_, h, i: (b_, i, h, 0)),
+            pl.BlockSpec((1, blk, 1, st), lambda b_, h, i: (b_, i, h, 0)),
+            pl.BlockSpec((1, blk, 1), lambda b_, h, i: (b_, i, h)),
+            pl.BlockSpec((1,), lambda b_, h, i: (h,)),
+            pl.BlockSpec((1, 1, hd, st), lambda b_, h, i: (b_, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk, 1, hd), lambda b_, h, i: (b_, i, h, 0)),
+            pl.BlockSpec((1, 1, hd, st), lambda b_, h, i: (b_, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, nh, hd), dtx.dtype),
+            jax.ShapeDtypeStruct((b, nh, hd, st), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((hd, st), jnp.float32)],
+        interpret=interpret,
+    )(dtx, bh, ch, dt, A, h0)
+
+
+# ===================================================================== mamba1
+def _s6_kernel(dtx_ref, bh_ref, ch_ref, dt_ref, a_ref, h0_ref, y_ref,
+               hlast_ref, h_scr, *, blk: int, n_blk: int):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...]                                 # (blk_d, st)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)            # (blk_d,)
+        decay = jnp.exp(dt_t[:, None] * a)                 # (blk_d, st)
+        dtx_t = dtx_ref[0, t].astype(jnp.float32)          # (blk_d,)
+        b_t = bh_ref[0, t].astype(jnp.float32)             # (st,)
+        c_t = ch_ref[0, t].astype(jnp.float32)             # (st,)
+        h = decay * h + dtx_t[:, None] * b_t[None, :]
+        y_ref[0, t] = (h * c_t[None, :]).sum(axis=1).astype(y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, blk, step, h_scr[...])
+
+    @pl.when(ib == n_blk - 1)
+    def _finish():
+        hlast_ref[0] = h_scr[...].astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "blk_d", "interpret"))
+def s6_scan(dtx, bh, ch, dt, A, h0, *, blk: int = 128, blk_d: int = 128,
+            interpret: bool = False):
+    """mamba1 selective scan.
+
+    dtx/dt: (B, L, di); bh/ch: (B, L, st); A: (di, st); h0: (B, di, st).
+    L % blk == 0 and di % blk_d == 0 (callers pad).
+    Returns (y (B, L, di), h_last (B, di, st)).
+    """
+    b, l, di = dtx.shape
+    st = bh.shape[-1]
+    if l % blk or di % blk_d:
+        raise ValueError(f"L={l}, di={di} must tile by ({blk}, {blk_d})")
+    grid = (b, di // blk_d, l // blk)
+    kernel = functools.partial(_s6_kernel, blk=blk, n_blk=l // blk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk, blk_d), lambda b_, d, i: (b_, i, d)),
+            pl.BlockSpec((1, blk, st), lambda b_, d, i: (b_, i, 0)),
+            pl.BlockSpec((1, blk, st), lambda b_, d, i: (b_, i, 0)),
+            pl.BlockSpec((1, blk, blk_d), lambda b_, d, i: (b_, i, d)),
+            pl.BlockSpec((blk_d, st), lambda b_, d, i: (d, 0)),
+            pl.BlockSpec((1, blk_d, st), lambda b_, d, i: (b_, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk, blk_d), lambda b_, d, i: (b_, i, d)),
+            pl.BlockSpec((1, blk_d, st), lambda b_, d, i: (b_, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, di), dtx.dtype),
+            jax.ShapeDtypeStruct((b, di, st), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((blk_d, st), jnp.float32)],
+        interpret=interpret,
+    )(dtx, bh, ch, dt, A, h0)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,43 @@
+"""Public selective-scan op: padding + backend dispatch.
+
+On TPU the Pallas kernels run (state in VMEM); on CPU/dry-run the model
+uses the fused chunked jnp formulation in :mod:`repro.models.ssm`
+(``_fused_ssd_scan``) whose body the roofline treats as this kernel via the
+``pallas_equiv_ssm`` scope.  This wrapper is the direct kernel entry used
+by tests and TPU deployments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import s6_scan, ssd_scan
+from repro.kernels.ssm_scan.ref import s6_scan_ref, ssd_scan_ref
+
+
+def _pad_l(x, blk):
+    pad = (-x.shape[1]) % blk
+    if pad:
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+        x = jnp.pad(x, widths)
+    return x
+
+
+def selective_scan(dtx, bh, ch, dt, A, h0, *, blk: int = 128,
+                   use_pallas=None, interpret: bool = False):
+    """Dispatching selective scan; mamba1 vs mamba2 inferred from ranks.
+
+    Padding with dt=0 is exact (decay 1, injection 0); padded y rows are
+    sliced away.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    l = dtx.shape[1]
+    mamba2 = dtx.ndim == 4
+    if not use_pallas and not interpret:
+        fn = ssd_scan_ref if mamba2 else s6_scan_ref
+        return fn(dtx, bh, ch, dt, A, h0)
+    args = [_pad_l(a, blk) for a in (dtx, bh, ch, dt)]
+    fn = ssd_scan if mamba2 else s6_scan
+    y, h_last = fn(*args, A, h0, blk=blk, interpret=interpret)
+    return y[:, :l], h_last

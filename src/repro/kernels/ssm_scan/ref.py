@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the selective scan (naive, L-length state tensors)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def ssd_scan_ref(dtx, bh, ch, dt, A, h0):
+    """mamba2 reference.  dtx (B,L,nh,hd); bh/ch (B,L,nh,st); dt (B,L,nh);
+    A (nh,); h0 (B,nh,hd,st).  Returns (y, h_last)."""
+    decay = jnp.exp(dt.astype(jnp.float32) * A[None, None])   # (B,L,nh)
+    inject = (dtx.astype(jnp.float32)[..., None]
+              * bh.astype(jnp.float32)[:, :, :, None, :])     # (B,L,nh,hd,st)
+    a_full = jnp.broadcast_to(decay[..., None, None], inject.shape)
+    prod, acc = jax.lax.associative_scan(_combine, (a_full, inject), axis=1)
+    h_all = prod * h0.astype(jnp.float32)[:, None] + acc
+    y = jnp.einsum("blhds,blhs->blhd", h_all,
+                   ch.astype(jnp.float32)).astype(dtx.dtype)
+    return y, h_all[:, -1]
+
+
+def s6_scan_ref(dtx, bh, ch, dt, A, h0):
+    """mamba1 reference.  dtx/dt (B,L,di); bh/ch (B,L,st); A (di,st);
+    h0 (B,di,st).  Returns (y, h_last)."""
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None]
+                    * A[None, None])                          # (B,L,di,st)
+    inject = (dtx.astype(jnp.float32)[..., None]
+              * bh.astype(jnp.float32)[:, :, None, :])        # (B,L,di,st)
+    prod, acc = jax.lax.associative_scan(_combine, (decay, inject), axis=1)
+    h_all = prod * h0.astype(jnp.float32)[:, None] + acc
+    y = jnp.einsum("blds,bls->bld", h_all,
+                   ch.astype(jnp.float32)).astype(dtx.dtype)
+    return y, h_all[:, -1]

@@ -1,0 +1,5 @@
+from repro.kernels.xor_parity.ops import (  # noqa: F401
+    parity_of_buffers,
+    reconstruct_member,
+    xor_reduce,
+)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: XOR parity encode / reconstruct (SCR partner-XOR analog).
+
+The node-level checkpoint tier groups G data-parallel peer hosts and stores
+``parity = m_0 ^ m_1 ^ ... ^ m_{G-1}`` on a peer outside the group, so any
+single lost member is recoverable as the XOR of the parity with the G-1
+survivors (paper §2.4: SCR's partner-XOR level).
+
+TPU mapping: the group dimension G is small (paper default 8) and the byte
+payload N is huge (GBs), so the kernel tiles N into VMEM-resident blocks of
+``block_n`` uint32 lanes and XOR-reduces the (G, block_n) tile on the VPU.
+A (G=8, block_n=16384) uint32 tile is 512 KiB — far under the ~16 MiB VMEM
+budget, leaving room for the Pallas pipeline's double buffering.
+
+Alignment: uint32 lanes with ``block_n`` a multiple of 128 match the (8, 128)
+int32 VREG tiling; callers pad the byte payload to 4·block_n bytes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xor_kernel(stacked_ref, out_ref):
+    """XOR-reduce the (G, block_n) tile over its group axis into (1, block_n)."""
+    tile = stacked_ref[...]
+    g = tile.shape[0]
+    acc = tile[0:1]                            # keep 2-D: (1, block_n)
+    for i in range(1, g):                      # G is a small static constant
+        acc = jnp.bitwise_xor(acc, tile[i : i + 1])
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def xor_reduce(
+    stacked: jnp.ndarray, *, block_n: int = 16384, interpret: bool = False
+) -> jnp.ndarray:
+    """XOR-reduce a ``(G, N) uint32`` array over axis 0 via Pallas.
+
+    N must be a multiple of ``block_n`` (callers pad); ``block_n`` must be a
+    multiple of 128 (VREG lane alignment).  Returns a ``(N,) uint32`` parity.
+    """
+    if stacked.ndim != 2:
+        raise ValueError(f"expected (G, N), got {stacked.shape}")
+    if stacked.dtype != jnp.uint32:
+        raise TypeError(f"expected uint32, got {stacked.dtype}")
+    g, n = stacked.shape
+    if block_n % 128:
+        raise ValueError(f"block_n={block_n} must be a multiple of 128")
+    if n % block_n:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        _xor_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((g, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.uint32),
+        interpret=interpret,
+    )(stacked)
+    return out[0]

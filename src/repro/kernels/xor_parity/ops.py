@@ -1,0 +1,68 @@
+"""Public ops for XOR parity: padding, byte<->u32 views, backend dispatch.
+
+``parity_of_buffers`` / ``reconstruct_member`` operate on raw byte buffers
+(host ``bytes``/``np.uint8``), which is what the node-level checkpoint tier
+stores.  On TPU the heavy XOR runs in the Pallas kernel; on CPU hosts the
+jitted jnp reference is used (the Pallas interpreter would be Python-speed).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xor_parity.kernel import xor_reduce as xor_reduce_pallas
+from repro.kernels.xor_parity.ref import xor_reduce_ref
+
+_LANE = 512  # pad byte payloads to 512 B = 128 uint32 lanes
+
+
+def _pad_to_u32(buffers: Sequence[np.ndarray], n_pad: int) -> np.ndarray:
+    """Stack uint8 buffers into a (G, n_pad/4) uint32 matrix, zero-padded."""
+    out = np.zeros((len(buffers), n_pad), dtype=np.uint8)
+    for i, b in enumerate(buffers):
+        arr = np.frombuffer(b, dtype=np.uint8) if isinstance(b, (bytes, bytearray)) else b
+        out[i, : arr.size] = arr
+    return out.view(np.uint32)
+
+
+def padded_len(nbytes: int) -> int:
+    return ((nbytes + _LANE - 1) // _LANE) * _LANE
+
+
+def xor_reduce(stacked: jnp.ndarray, *, use_pallas: bool = None) -> jnp.ndarray:
+    """Dispatch: Pallas kernel on TPU, jitted reference elsewhere."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        n = stacked.shape[1]
+        block = 16384 if n % 16384 == 0 else 128
+        return xor_reduce_pallas(stacked, block_n=block)
+    return jax.jit(xor_reduce_ref)(stacked)
+
+
+def parity_of_buffers(buffers: Sequence) -> bytes:
+    """XOR parity of a group of byte buffers (zero-padded to equal length)."""
+    if not buffers:
+        raise ValueError("empty parity group")
+    sizes = [len(b) if isinstance(b, (bytes, bytearray)) else b.nbytes for b in buffers]
+    n_pad = padded_len(max(sizes))
+    stacked = jnp.asarray(_pad_to_u32(buffers, n_pad))
+    parity = np.asarray(xor_reduce(stacked))
+    return parity.view(np.uint8).tobytes()
+
+
+def reconstruct_member(
+    parity: bytes, survivors: Sequence, lost_size: int
+) -> bytes:
+    """Recover a lost member: XOR(parity, survivors...), truncated to size."""
+    bufs: List = [parity, *survivors]
+    n_pad = padded_len(max(len(parity), *(
+        len(b) if isinstance(b, (bytes, bytearray)) else b.nbytes for b in bufs
+    )))
+    stacked = jnp.asarray(_pad_to_u32(bufs, n_pad))
+    member = np.asarray(xor_reduce(stacked)).view(np.uint8).tobytes()
+    return member[:lost_size]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the XOR-parity kernel.
+
+Parity of a group of equal-length ``uint32`` buffers is the elementwise XOR
+across the group dimension.  Reconstruction of a lost member is the same
+operation applied to (parity, surviving members) — XOR is its own inverse.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+
+def xor_reduce_ref(stacked: jnp.ndarray) -> jnp.ndarray:
+    """XOR-reduce over axis 0 of a ``(G, N) uint32`` array."""
+    if stacked.ndim != 2:
+        raise ValueError(f"expected (G, N), got {stacked.shape}")
+    if stacked.dtype != jnp.uint32:
+        raise TypeError(f"expected uint32, got {stacked.dtype}")
+    rows = [stacked[g] for g in range(stacked.shape[0])]
+    return functools.reduce(jnp.bitwise_xor, rows)

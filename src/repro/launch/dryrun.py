@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init) — this file is the only place the 512 placeholder
+# devices exist; tests and benches see the real single CPU device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds the step function + sharded ShapeDtypeStruct inputs
+     (``launch.specs``), — no device memory is ever allocated,
+  3. ``jit(step).lower(...).compile()`` — a sharding mismatch, an
+     unsupported collective, or an OOM-sized temp here is a bug in the
+     framework, not in the arch,
+  4. prints ``memory_analysis()`` (proves it fits) and the three-term
+     roofline from the compiled HLO (``analysis.roofline``),
+  5. optionally writes a JSON record under ``experiments/dryrun/``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+        --shape train_4k [--multipod] [--json-dir experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all    # whole matrix
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             json_dir, verbose: bool = True) -> dict:
+    import jax
+
+    from repro.analysis import roofline
+    from repro.configs import SHAPES, cell_supported, get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_step
+
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    built = build_step(arch, shape, mesh)
+    lowered = built.lower(mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    try:
+        cost = compiled.cost_analysis()
+        xla_flops = float(cost.get("flops", 0.0))
+    except Exception:
+        xla_flops = 0.0
+    rep = roofline.analyze(compiled.as_text())
+    mfl = roofline.model_flops(
+        get_config(arch), shape.seq_len, shape.global_batch, shape.kind,
+        n_chips)
+
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_bytes": per_dev_bytes,
+            "fits_16GB": per_dev_bytes < 16e9,
+        },
+        "xla_cost_flops_per_device": xla_flops,
+        "roofline": rep.as_dict(),
+        "model_flops_per_chip": mfl,
+        "model_hlo_ratio": mfl / max(rep.flops, 1.0),
+    }
+    if verbose:
+        print(f"== {arch} × {shape_name} × {record['mesh']} "
+              f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s)")
+        print(f"  peak bytes/device     {per_dev_bytes:.3e} "
+              f"({'fits' if record['memory']['fits_16GB'] else 'EXCEEDS'} "
+              f"16 GB v5e)")
+        print(roofline.format_report(rep, mfl))
+    if json_dir is not None:
+        out = json_dir / record["mesh"] / f"{arch}__{shape_name}.json"
+        roofline.save_json(out, record)
+    return record
+
+
+def run_matrix(json_dir: Path, multipod_only: bool = False,
+               archs=None, shapes=None) -> int:
+    """Run every cell in a subprocess (compiles leak; isolation is safer).
+
+    Returns the number of failed cells."""
+    from repro.configs import ARCH_IDS, SHAPES, cell_supported
+
+    failures = 0
+    meshes = [True] if multipod_only else [False, True]
+    for multi_pod in meshes:
+        for arch in (archs or ARCH_IDS):
+            for shape in (shapes or SHAPES):
+                ok, reason = cell_supported(arch, shape)
+                mesh_name = "2x16x16" if multi_pod else "16x16"
+                if not ok:
+                    print(f"-- skip {arch} × {shape} × {mesh_name}: {reason}")
+                    continue
+                out = json_dir / mesh_name / f"{arch}__{shape}.json"
+                if out.exists():
+                    print(f"-- cached {arch} × {shape} × {mesh_name}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--json-dir", str(json_dir)]
+                if multi_pod:
+                    cmd.append("--multipod")
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                sys.stdout.write(r.stdout)
+                if r.returncode != 0:
+                    failures += 1
+                    print(f"!! FAILED {arch} × {shape} × {mesh_name}")
+                    sys.stdout.write(r.stderr[-3000:])
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full 40-cell × 2-mesh matrix (subprocesses)")
+    ap.add_argument("--json-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    json_dir = Path(args.json_dir)
+    if args.all:
+        failures = run_matrix(json_dir)
+        sys.exit(1 if failures else 0)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    try:
+        rec = run_cell(args.arch, args.shape, args.multipod, json_dir)
+        if rec.get("skipped"):
+            print(f"-- skip {args.arch} × {args.shape}: {rec['skipped']}")
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

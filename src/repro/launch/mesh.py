@@ -1,0 +1,21 @@
+"""Production mesh definitions (single-pod 16×16, multi-pod 2×16×16).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any JAX
+import and only then builds the mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests / small runs (e.g. ((1,), ('data',)))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

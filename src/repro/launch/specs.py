@@ -1,0 +1,249 @@
+"""Input/state ShapeDtypeStruct builders for the multi-pod dry-run.
+
+``input_specs(arch, shape)`` (and the ``build_*`` step builders below)
+return weak-type-correct, *sharded* ``jax.ShapeDtypeStruct`` stand-ins for
+every model input — no device allocation ever happens; the full-size
+configs are exercised exclusively through ``jit(...).lower(...).compile()``.
+
+Three step kinds map to the assigned shape kinds:
+
+    train_4k      → ``train_step(params, opt_state, batch)``
+    prefill_32k   → ``prefill(params, tokens[, embeds])``
+    decode_32k /
+    long_500k     → ``decode(params, cache, tokens (B,1), pos)``
+
+Audio/VLM archs get a modality-stub ``embeds`` prefix of ``cfg.n_patches``
+frames/patches (the frontend is a stub per the assignment); the text/token
+span shrinks so the total sequence stays at the assigned ``seq_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs import ShapeSpec, get_config
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.optim.adamw import OptimConfig, adamw_init, opt_state_logical
+from repro.sharding.activations import use_rules
+from repro.sharding.logical import LogicalRules, shard_specs
+from repro.train.steps import (
+    TrainStepConfig, make_decode_step, make_prefill, make_train_step,
+)
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+def _sds(shape_tree, sharding_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, sharding_tree)
+
+
+def arch_config(arch_id: str, mesh: Mesh, tiny: bool = False) -> ModelConfig:
+    """Arch config adjusted for the mesh's tensor-parallel degree."""
+    cfg = get_config(arch_id, tiny=tiny)
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return cfg.padded_for_tp(axis_sizes.get("model", 1))
+
+
+def dryrun_opt(cfg: ModelConfig) -> OptimConfig:
+    """Per-arch optimizer policy: ≥100B params → 8-bit moments, no master
+    copy (the difference between fitting and not fitting the MoE cells on a
+    16 GB v5e — see EXPERIMENTS.md §Dry-run)."""
+    big = cfg.param_count() > 100e9
+    return OptimConfig(state_bits=8 if big else 32, master_fp32=False)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    """A lowered-ready step: ``jit_fn.lower(*args)`` is all that's left."""
+    fn: object                  # the pure step function
+    args: tuple                 # sharded ShapeDtypeStruct inputs
+    out_shardings: object
+    donate_argnums: tuple
+    cfg: ModelConfig
+    rules: object = None        # LogicalRules for activation constraints
+
+    def lower(self, mesh: Mesh):
+        jitted = jax.jit(self.fn, out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        # activation constraints (sharding.activations) apply during trace
+        rules = self.rules if self.rules is not None else LogicalRules(mesh)
+        with jax.set_mesh(mesh), use_rules(rules):
+            return jitted.lower(*self.args)
+
+
+# ------------------------------------------------------------------ batch
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, rules: LogicalRules,
+                mesh: Mesh) -> dict:
+    """Training/prefill token batch as sharded ShapeDtypeStructs."""
+    b, l = shape.global_batch, shape.seq_len
+    n_stub = cfg.n_patches if cfg.frontend else 0
+    l_tok = l - n_stub
+    out = {
+        "tokens": jax.ShapeDtypeStruct(
+            (b, l_tok), jnp.int32,
+            sharding=NamedSharding(
+                mesh, rules.spec("batch", "seq", shape=(b, l_tok)))),
+        "labels": jax.ShapeDtypeStruct(
+            (b, l_tok), jnp.int32,
+            sharding=NamedSharding(
+                mesh, rules.spec("batch", "seq", shape=(b, l_tok)))),
+    }
+    if n_stub:
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (b, n_stub, cfg.d_model), cfg.dtype,
+            sharding=NamedSharding(
+                mesh, rules.spec("batch", "patches", "embed_act",
+                                 shape=(b, n_stub, cfg.d_model))))
+    return out
+
+
+def param_specs(cfg: ModelConfig, rules: LogicalRules, mesh: Mesh):
+    shapes = jax.eval_shape(
+        lambda k: M.init_params(k, cfg), jax.random.key(0))
+    specs = shard_specs(rules, M.param_logical(cfg), shapes)
+    return _sds(shapes, _named(mesh, specs)), specs
+
+
+def opt_specs(cfg: ModelConfig, ocfg: OptimConfig, param_sds,
+              rules: LogicalRules, mesh: Mesh):
+    shapes = jax.eval_shape(lambda p: adamw_init(p, ocfg), param_sds)
+    logical = opt_state_logical(M.param_logical(cfg), ocfg, params=param_sds)
+    specs = shard_specs(rules, logical, shapes)
+    return _sds(shapes, _named(mesh, specs)), specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                rules: LogicalRules, mesh: Mesh):
+    shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, max_len))
+    specs = shard_specs(rules, M.cache_logical(cfg), shapes)
+    return _sds(shapes, _named(mesh, specs)), specs
+
+
+# ------------------------------------------------------------- step builders
+def train_rules(mesh: Mesh, sequence_parallel: bool = True,
+                profile: str = "tp2d") -> LogicalRules:
+    """Training parallelism profiles (EXPERIMENTS.md §Perf iteration 2.1).
+
+    ``tp2d`` — MaxText-style 2-D: batch over (pod, data), weights FSDP over
+    data × TP over model.  With ``sequence_parallel`` the residual stream's
+    d_model shards over the model axis (Megatron-SP): same collective wire
+    bytes as TP all-reduce, but saved-for-backward residuals shrink by the
+    TP degree — the difference between fitting and not fitting the 61-layer
+    archs in HBM.
+
+    ``fsdp`` — pure ZeRO-3: batch over (pod, data, **model**) — one sequence
+    per chip at train_4k — and weights sharded over (data, model); layer
+    weights are all-gathered on use.  For the ≤10B dense/SSM archs the 2-D
+    profile is dominated by TP collectives that scale with *activations*
+    (≈630 GB/device/step for falcon-7b), while FSDP's collectives scale
+    with *weights* (≈3 passes × params/device ≈ 50 GB): ~10× less wire.
+    MoE archs keep ``tp2d`` (experts need the model axis for EP).
+    """
+    rules = LogicalRules(mesh)
+    if profile == "fsdp":
+        rules.rules.update({
+            "batch": ("pod", "data", "model"),
+            "embed": ("data", "model"),
+            "heads": None, "kv_heads": None, "mlp": None, "vocab": "model",
+            "ssm_inner": None, "ssm_heads": None, "latent": None,
+            "embed_act": None,
+        })
+        return rules
+    if sequence_parallel:
+        rules.rules["embed_act"] = "model"
+    return rules
+
+
+def train_profile(cfg: ModelConfig) -> str:
+    """Default profile per arch family: MoE keeps 2-D (EP needs the model
+    axis); dense/SSM/hybrid train pure-FSDP (§Perf iteration 2.1)."""
+    return "tp2d" if cfg.n_experts else "fsdp"
+
+
+def build_train(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                ocfg: Optional[OptimConfig] = None,
+                scfg: Optional[TrainStepConfig] = None,
+                sequence_parallel: bool = True,
+                profile: Optional[str] = None) -> BuiltStep:
+    rules = train_rules(mesh, sequence_parallel,
+                        profile or train_profile(cfg))
+    ocfg = ocfg or dryrun_opt(cfg)
+    # bf16 gradients halve the DP-reduction wire bytes (compressed-DP) and
+    # 512-token CE chunks cut the per-chunk unembed weight-gather/grad-
+    # reduce count 4x vs the 128 default (§Perf iteration 2.2)
+    scfg = scfg or TrainStepConfig(grad_dtype="bfloat16", loss_chunk=512)
+    p_sds, p_specs = param_specs(cfg, rules, mesh)
+    o_sds, o_specs = opt_specs(cfg, ocfg, p_sds, rules, mesh)
+    batch = input_specs(cfg, shape, rules, mesh)
+    step = make_train_step(cfg, ocfg, scfg)
+    return BuiltStep(
+        fn=step,
+        args=(p_sds, o_sds, batch),
+        out_shardings=(_named(mesh, p_specs), _named(mesh, o_specs), None),
+        donate_argnums=(0, 1),
+        cfg=cfg,
+        rules=rules,
+    )
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    rules = LogicalRules(mesh)
+    p_sds, p_specs = param_specs(cfg, rules, mesh)
+    batch = input_specs(cfg, shape, rules, mesh)
+    _, c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                             rules, mesh)
+    fn = make_prefill(cfg, shape.global_batch, shape.seq_len)
+    args = (p_sds, batch["tokens"])
+    if "embeds" in batch:
+        args = args + (batch["embeds"],)
+    return BuiltStep(
+        fn=fn, args=args,
+        out_shardings=(_named(mesh, c_specs), None),
+        donate_argnums=(),
+        cfg=cfg,
+        rules=rules,
+    )
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> BuiltStep:
+    rules = LogicalRules(mesh)
+    p_sds, p_specs = param_specs(cfg, rules, mesh)
+    c_sds, c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                                 rules, mesh)
+    b = shape.global_batch
+    tokens = jax.ShapeDtypeStruct(
+        (b, 1), jnp.int32,
+        sharding=NamedSharding(mesh, rules.spec("batch", None, shape=(b, 1))))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(
+                                   mesh, jax.sharding.PartitionSpec()))
+    fn = make_decode_step(cfg)
+    return BuiltStep(
+        fn=fn, args=(p_sds, c_sds, tokens, pos),
+        out_shardings=(_named(mesh, c_specs), None),
+        donate_argnums=(1,),          # cache is updated in place
+        cfg=cfg,
+        rules=rules,
+    )
+
+
+def build_step(arch_id: str, shape: ShapeSpec, mesh: Mesh,
+               tiny: bool = False) -> BuiltStep:
+    cfg = arch_config(arch_id, mesh, tiny=tiny)
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh)
+    return build_decode(cfg, shape, mesh)

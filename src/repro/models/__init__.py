@@ -1,0 +1,7 @@
+"""Model zoo: composable JAX modules covering the ten assigned architectures.
+
+Pure-functional modules: each exposes ``init(key, cfg) -> params`` (nested
+dict of arrays), ``logical(cfg) -> same-shape tree of logical-dim tuples``
+(consumed by :mod:`repro.sharding`), and ``apply(params, ...)``.
+"""
+from repro.models.common import ModelConfig  # noqa: F401

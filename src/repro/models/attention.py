@@ -1,0 +1,289 @@
+"""Attention modules: GQA (with optional sliding window) and MLA.
+
+Train path (no cache) routes through :func:`repro.kernels.flash_attention.
+ops.attention` — the Pallas flash kernel on TPU, the jnp reference on CPU.
+Decode path attends over a static-size cache with a dynamic length mask
+(GEMV-bound; the flash kernel buys nothing there).
+
+Caches:
+  * GQA: ``{"k","v": (B, Hkv, M, hd), "pos"}`` — M = max_len, or M = window
+    for SWA (rolling slots: slot = pos % window, which is exactly the entry
+    leaving the window).
+  * MLA: ``{"ckv": (B, M, kv_lora), "krope": (B, M, rope_dim), "pos"}`` —
+    the deepseek compressed-latent cache; per-head K/V are re-expanded from
+    the latent on use (the paper-faithful formulation; the absorbed-matmul
+    decode optimization is a §Perf hillclimb in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention as flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.sharding.activations import constrain
+
+Cache = dict
+
+
+# =========================================================================
+# GQA (llama-family; covers MHA when n_kv_heads == n_heads) + SWA option
+# =========================================================================
+def gqa_init(key, cfg):
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, h, hd), d, cfg.dtype),
+        "wk": dense_init(k2, (d, hkv, hd), d, cfg.dtype),
+        "wv": dense_init(k3, (d, hkv, hd), d, cfg.dtype),
+        "wo": dense_init(k4, (h, hd, d), h * hd, cfg.dtype),
+    }
+
+
+def gqa_logical(cfg):
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def gqa_cache_init(cfg, batch: int, max_len: int, dtype) -> Cache:
+    m = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, m, cfg.hd), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, m, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def gqa_cache_logical(cfg):
+    return {
+        "k": ("batch", "kv_heads", "seq", "head_dim"),
+        "v": ("batch", "kv_heads", "seq", "head_dim"),
+        "pos": (),
+    }
+
+
+def gqa_apply(
+    params, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+    cache: Optional[Cache] = None,
+) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    b, l, _ = x.shape
+    q = jnp.einsum("bld,dhk->bhlk", x, params["wq"])
+    k = jnp.einsum("bld,dhk->bhlk", x, params["wk"])
+    v = jnp.einsum("bld,dhk->bhlk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "heads", None, "head_dim")
+    k = constrain(k, "batch", "kv_heads", None, "head_dim")
+    v = constrain(v, "batch", "kv_heads", None, "head_dim")
+
+    if cache is None:
+        y = flash_attention(q, k, v, causal=True, window=cfg.window)
+        new_cache = None
+    else:
+        m = cache["k"].shape[2]
+        pos = cache["pos"]
+        rolling = cfg.window is not None and m == cfg.window
+        if rolling:
+            # keep only the newest min(l, m) entries (unique slots)
+            keep = min(l, m)
+            slots = (pos + l - keep + jnp.arange(keep)) % m
+            ck = _scatter_seq(cache["k"], k[:, :, -keep:], slots)
+            cv = _scatter_seq(cache["v"], v[:, :, -keep:], slots)
+            if l == 1:
+                # decode: every valid slot is inside the newest query's
+                # window (the overwritten slot is exactly the one leaving it)
+                kv_len = jnp.minimum(pos + 1, m)
+                y = attention_ref(q, ck, cv, causal=False, kv_len=kv_len)
+            else:
+                # single-shot prefill (pos == 0 assumed; chunked SWA prefill
+                # would additionally need the previous window from the cache)
+                y = flash_attention(q, k, v, causal=True, window=cfg.window)
+        else:
+            slots = pos + jnp.arange(l)
+            ck = _scatter_seq(cache["k"], k, slots)
+            cv = _scatter_seq(cache["v"], v, slots)
+            if l > 1:
+                # single-shot prefill (pos == 0): attention over the chunk
+                # itself via the blocked/flash path — O(L·D) memory
+                y = flash_attention(q, k, v, causal=True, window=cfg.window)
+            else:
+                y = attention_ref(q, ck, cv, causal=True, q_offset=pos,
+                                  kv_len=pos + l)
+        new_cache = {"k": ck, "v": cv, "pos": pos + l}
+    out = jnp.einsum("bhlk,hkd->bld", y, params["wo"])
+    return out, new_cache
+
+
+def _scatter_seq(cache_kv: jnp.ndarray, new: jnp.ndarray, slots: jnp.ndarray):
+    """Write new (B,H,L,D) entries into cache (B,H,M,D) at ``slots``."""
+    return cache_kv.at[:, :, slots, :].set(new.astype(cache_kv.dtype))
+
+
+# =========================================================================
+# MLA — multi-head latent attention (deepseek-v3 / kimi-k2 family)
+# =========================================================================
+def mla_init(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    keys = jax.random.split(key, 6)
+    params = {
+        "wkv_a": dense_init(keys[0], (d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                            d, cfg.dtype),
+        "kv_norm": jnp.ones((cfg.kv_lora_rank,), cfg.dtype),
+        "wkv_b": dense_init(keys[1],
+                            (cfg.kv_lora_rank, h, cfg.qk_nope_dim + cfg.v_head_dim),
+                            cfg.kv_lora_rank, cfg.dtype),
+        "wo": dense_init(keys[2], (h, cfg.v_head_dim, d),
+                         h * cfg.v_head_dim, cfg.dtype),
+    }
+    if cfg.q_lora_rank:
+        params["wq_a"] = dense_init(keys[3], (d, cfg.q_lora_rank), d, cfg.dtype)
+        params["q_norm"] = jnp.ones((cfg.q_lora_rank,), cfg.dtype)
+        params["wq_b"] = dense_init(keys[4], (cfg.q_lora_rank, h, qk),
+                                    cfg.q_lora_rank, cfg.dtype)
+    else:
+        params["wq"] = dense_init(keys[5], (d, h, qk), d, cfg.dtype)
+    return params
+
+
+def mla_logical(cfg):
+    out = {
+        "wkv_a": ("embed", "latent"),
+        "kv_norm": (None,),
+        "wkv_b": ("latent", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.q_lora_rank:
+        out["wq_a"] = ("embed", "latent")
+        out["q_norm"] = (None,)
+        out["wq_b"] = ("latent", "heads", "head_dim")
+    else:
+        out["wq"] = ("embed", "heads", "head_dim")
+    return out
+
+
+def mla_cache_init(cfg, batch: int, max_len: int, dtype) -> Cache:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_cache_logical(cfg):
+    return {
+        "ckv": ("batch", "seq", "latent"),
+        "krope": ("batch", "seq", None),
+        "pos": (),
+    }
+
+
+def _mla_q(params, x, cfg, positions):
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bld,dr->blr", x, params["wq_a"])
+        cq = rms_norm(cq, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("blr,rhk->bhlk", cq, params["wq_b"])
+    else:
+        q = jnp.einsum("bld,dhk->bhlk", x, params["wq"])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _mla_expand_kv(params, ckv, krope, cfg):
+    """Re-expand per-head K/V from the compressed latent (paper-faithful)."""
+    k_nope = jnp.einsum("blr,rhk->bhlk", ckv,
+                        params["wkv_b"][..., : cfg.qk_nope_dim])
+    v = jnp.einsum("blr,rhk->bhlk", ckv,
+                   params["wkv_b"][..., cfg.qk_nope_dim:])
+    k_rope = jnp.broadcast_to(
+        krope[:, None], (krope.shape[0], cfg.n_heads, krope.shape[1],
+                         cfg.qk_rope_dim)
+    ).astype(k_nope.dtype)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return k, v
+
+
+def mla_apply(
+    params, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+    cache: Optional[Cache] = None,
+) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    b, l, _ = x.shape
+    sm_scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q = _mla_q(params, x, cfg, positions)
+
+    ckv_full = jnp.einsum("bld,dr->blr", x, params["wkv_a"])
+    ckv = rms_norm(ckv_full[..., : cfg.kv_lora_rank], params["kv_norm"],
+                   cfg.norm_eps)
+    krope = apply_rope(
+        ckv_full[..., cfg.kv_lora_rank:][:, None], positions, cfg.rope_theta
+    )[:, 0]
+
+    if cache is None:
+        k, v = _mla_expand_kv(params, ckv, krope, cfg)
+        y = flash_attention(q, k, v, causal=True, sm_scale=sm_scale)
+        new_cache = None
+    else:
+        pos = cache["pos"]
+        slots = pos + jnp.arange(l)
+        cc = cache["ckv"].at[:, slots, :].set(ckv.astype(cache["ckv"].dtype))
+        cr = cache["krope"].at[:, slots, :].set(
+            krope.astype(cache["krope"].dtype))
+        new_cache = {"ckv": cc, "krope": cr, "pos": pos + l}
+        if l > 1:
+            # single-shot prefill (pos == 0): expand only the chunk's K/V
+            k, v = _mla_expand_kv(params, ckv, krope, cfg)
+            y = flash_attention(q, k, v, causal=True, sm_scale=sm_scale)
+        elif cfg.mla_absorb:
+            # absorbed-matmul decode (§Perf iteration 4.1): fold wkv_b into
+            # the query/output sides and attend directly over the latent
+            # cache — the (B, H, L_ctx, d) per-head K/V re-expansion
+            # (hundreds of GB of HBM traffic at decode_32k) never
+            # materializes.
+            y = _mla_absorbed_decode(params, q, cc, cr, cfg, sm_scale, pos)
+        else:
+            # paper-faithful latent re-expansion (baseline path, see
+            # EXPERIMENTS.md §Perf 4.1)
+            k, v = _mla_expand_kv(params, cc, cr, cfg)
+            y = attention_ref(q, k, v, causal=True, sm_scale=sm_scale,
+                              q_offset=pos, kv_len=pos + l)
+    out = jnp.einsum("bhlk,hkd->bld", y, params["wo"])
+    return out, new_cache
+
+
+def _mla_absorbed_decode(params, q, ckv_cache, krope_cache, cfg, sm_scale,
+                         pos):
+    """Decode attention in latent space (deepseek's absorbed formulation).
+
+    scores  = q_nope·(W_k c) + q_rope·k_rope  =  (W_k^T q_nope)·c + ...
+    context = W_v^T (sum_t p_t c_t)
+
+    Per step this costs O(H·(nope+v)·R) weight-absorption matmuls plus
+    O(H·M·R) latent attention — no (B, H, M, ·) expanded K/V tensor.
+    Identical math to the expanded path (tests assert equality).
+    Returns y (B, H, 1, v_head_dim).
+    """
+    nope = cfg.qk_nope_dim
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    wk = params["wkv_b"][..., :nope]                  # (R, H, nope)
+    wv = params["wkv_b"][..., nope:]                  # (R, H, v)
+    # fold W_k into the query: (B, H, 1, nope) -> (B, H, 1, R)
+    q_lat = jnp.einsum("bhln,rhn->bhlr", q_nope, wk)
+    s = jnp.einsum("bhlr,bmr->bhlm", q_lat, ckv_cache) \
+        + jnp.einsum("bhlp,bmp->bhlm", q_rope,
+                     krope_cache.astype(q_rope.dtype))
+    s = s.astype(jnp.float32) * sm_scale              # (B, H, 1, M)
+    m = ckv_cache.shape[1]
+    valid = jnp.arange(m)[None, None, None] <= pos    # causal over cache
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(ckv_cache.dtype)
+    ctx_lat = jnp.einsum("bhlm,bmr->bhlr", p, ckv_cache)
+    # unfold W_v on the way out: (B, H, 1, R) -> (B, H, 1, v)
+    return jnp.einsum("bhlr,rhv->bhlv", ctx_lat, wv)

@@ -1,0 +1,97 @@
+"""Decoder blocks assembled from the attention / ffn / ssm modules."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, mlp_init, mlp_logical, rms_norm
+
+
+# ---------------------------------------------------------------- transformer
+def tblock_init(key, cfg, d_ff: Optional[int] = None, use_moe: bool = False):
+    k1, k2 = jax.random.split(key)
+    if cfg.attn_type == "mla":
+        a = attn.mla_init(k1, cfg)
+    else:
+        a = attn.gqa_init(k1, cfg)
+    if use_moe:
+        f = moe_mod.moe_init(k2, cfg)
+    else:
+        f = mlp_init(k2, cfg, d_ff=d_ff)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+        "attn": a,
+        "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ffn": f,
+    }
+
+
+def tblock_logical(cfg, use_moe: bool = False):
+    a = attn.mla_logical(cfg) if cfg.attn_type == "mla" else attn.gqa_logical(cfg)
+    f = moe_mod.moe_logical(cfg) if use_moe else mlp_logical(cfg)
+    return {"ln1": ("embed_act",), "attn": a, "ln2": ("embed_act",), "ffn": f}
+
+
+def tblock_apply(params, x, cfg, positions, cache=None, use_moe: bool = False):
+    """Returns (y, new_cache, aux_loss)."""
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, new_cache = attn.mla_apply(params["attn"], h, cfg, positions, cache)
+    else:
+        a, new_cache = attn.gqa_apply(params["attn"], h, cfg, positions, cache)
+    x = x + a
+    h = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if use_moe:
+        f, aux = moe_mod.moe_apply(params["ffn"], h, cfg)
+    else:
+        f, aux = mlp_apply(params["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------- ssm block
+def sblock_init(key, cfg):
+    m = (ssm_mod.mamba2_init if cfg.ssm_type == "mamba2"
+         else ssm_mod.mamba1_init)(key, cfg)
+    return {"ln": jnp.ones((cfg.d_model,), cfg.dtype), "ssm": m}
+
+
+def sblock_logical(cfg):
+    m = (ssm_mod.mamba2_logical if cfg.ssm_type == "mamba2"
+         else ssm_mod.mamba1_logical)(cfg)
+    return {"ln": ("embed_act",), "ssm": m}
+
+
+def sblock_apply(params, x, cfg, cache=None):
+    h = rms_norm(x, params["ln"], cfg.norm_eps)
+    apply = (ssm_mod.mamba2_apply if cfg.ssm_type == "mamba2"
+             else ssm_mod.mamba1_apply)
+    y, new_cache = apply(params["ssm"], h, cfg, cache)
+    return x + y, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------- cache ctors
+def tblock_cache_init(cfg, batch: int, max_len: int, dtype):
+    if cfg.attn_type == "mla":
+        return attn.mla_cache_init(cfg, batch, max_len, dtype)
+    return attn.gqa_cache_init(cfg, batch, max_len, dtype)
+
+
+def tblock_cache_logical(cfg):
+    if cfg.attn_type == "mla":
+        return attn.mla_cache_logical(cfg)
+    return attn.gqa_cache_logical(cfg)
+
+
+def sblock_cache_init(cfg, batch: int, dtype):
+    return (ssm_mod.mamba2_cache_init if cfg.ssm_type == "mamba2"
+            else ssm_mod.mamba1_cache_init)(cfg, batch, dtype)
+
+
+def sblock_cache_logical(cfg):
+    return (ssm_mod.mamba2_cache_logical if cfg.ssm_type == "mamba2"
+            else ssm_mod.mamba1_cache_logical)(cfg)

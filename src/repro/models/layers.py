@@ -1,0 +1,88 @@
+"""Shared layer primitives: RMSNorm, RoPE, SwiGLU MLP, embedding."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- helpers
+def dense_init(key, shape, in_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(max(1, in_dim))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., L, D even); positions: (L,) or (B, L)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                              # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv    # (..., L, D/2)
+    # broadcast angle to x's rank: x is (B, H, L, D); ang (L, D/2) or (B, L, D/2)
+    while ang.ndim < x.ndim:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.stack([xf1 * cos - xf2 * sin, xf1 * sin + xf2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(key, cfg):
+    return {"embedding": dense_init(key, (cfg.vocab, cfg.d_model),
+                                    cfg.d_model, cfg.dtype)}
+
+
+def embed_logical(cfg):
+    return {"embedding": ("vocab", "embed")}
+
+
+def embed_apply(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["embedding"][tokens]
+
+
+def unembed_apply(params, x: jnp.ndarray, fp32: bool = True) -> jnp.ndarray:
+    w = params["embedding"]
+    logits = jnp.einsum("bld,vd->blv", x, w)
+    return logits.astype(jnp.float32) if fp32 else logits
+
+
+# ---------------------------------------------------------------- SwiGLU MLP
+def mlp_init(key, cfg, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), d, cfg.dtype),
+        "w_up": dense_init(k2, (d, f), d, cfg.dtype),
+        "w_down": dense_init(k3, (f, d), f, cfg.dtype),
+    }
+
+
+def mlp_logical(cfg):
+    return {
+        "w_gate": ("embed", "mlp"),
+        "w_up": ("embed", "mlp"),
+        "w_down": ("mlp", "embed"),
+    }
+
+
+def mlp_apply(params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("bld,df->blf", x, params["w_gate"])
+    u = jnp.einsum("bld,df->blf", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("blf,fd->bld", h, params["w_down"])

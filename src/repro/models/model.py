@@ -1,0 +1,441 @@
+"""Full language-model assembly: embed → blocks → norm → logits.
+
+Families
+  * dense / audio / vlm — transformer blocks (GQA or MLA attention),
+  * moe   — ``first_dense_layers`` dense blocks, then MoE blocks,
+  * ssm   — mamba1/mamba2 blocks (attention-free),
+  * hybrid — zamba2: groups of ``shared_attn_every`` mamba2 blocks with ONE
+    weight-shared transformer block applied between groups.
+
+Layer stacking: homogeneous runs of blocks hold their parameters stacked on
+a leading ``layers`` axis; ``cfg.scan_layers`` selects ``lax.scan`` (compact
+HLO, fast compile) vs an unrolled python loop (exact per-layer cost
+analysis — the dry-run uses this so `cost_analysis()` counts every layer).
+
+Caches for serving: a pytree with the same layer-stacked structure; decode
+steps thread it through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.common import ModelConfig
+from repro.models.layers import (
+    dense_init, embed_apply, embed_init, embed_logical, rms_norm,
+    unembed_apply,
+)
+from repro.sharding.activations import constrain
+
+
+def _stack_init(init_fn, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def _prepend(axis: str, tree):
+    return jax.tree_util.tree_map(
+        lambda dims: (axis, *dims),
+        tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(d, (str, type(None))) for d in x),
+    )
+
+
+def _layer_slice(tree, i: int):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+# ==========================================================================
+# parameters
+# ==========================================================================
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    params = {"embed": embed_init(ks[0], cfg),
+              "final_ln": jnp.ones((cfg.d_model,), cfg.dtype)}
+    if cfg.family in ("dense", "audio", "vlm"):
+        params["blocks"] = _stack_init(
+            lambda k: blk.tblock_init(k, cfg), ks[1], cfg.n_layers)
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            params["dense_blocks"] = _stack_init(
+                lambda k: blk.tblock_init(
+                    k, cfg, d_ff=cfg.dense_d_ff or cfg.d_ff),
+                ks[1], cfg.first_dense_layers)
+        params["blocks"] = _stack_init(
+            lambda k: blk.tblock_init(k, cfg, use_moe=True),
+            ks[2], cfg.n_layers - cfg.first_dense_layers)
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack_init(
+            lambda k: blk.sblock_init(k, cfg), ks[1], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        params["blocks"] = _stack_init(
+            lambda k: blk.sblock_init(k, cfg), ks[1], cfg.n_layers)
+        params["shared_block"] = blk.tblock_init(ks[2], cfg)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            ks[3], (cfg.d_model, cfg.vocab), cfg.d_model, cfg.dtype)
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": dense_init(ks[4], (2 * cfg.d_model, cfg.d_model),
+                               2 * cfg.d_model, cfg.dtype),
+            "ln": jnp.ones((cfg.d_model,), cfg.dtype),
+            "block": blk.tblock_init(ks[5], cfg, use_moe=cfg.family == "moe"),
+        }
+    return params
+
+
+def param_logical(cfg: ModelConfig):
+    out = {"embed": embed_logical(cfg), "final_ln": ("embed_act",)}
+    if cfg.family in ("dense", "audio", "vlm"):
+        out["blocks"] = _prepend("layers", blk.tblock_logical(cfg))
+    elif cfg.family == "moe":
+        if cfg.first_dense_layers:
+            out["dense_blocks"] = _prepend("layers", blk.tblock_logical(cfg))
+        out["blocks"] = _prepend("layers", blk.tblock_logical(cfg, use_moe=True))
+    elif cfg.family == "ssm":
+        out["blocks"] = _prepend("layers", blk.sblock_logical(cfg))
+    elif cfg.family == "hybrid":
+        out["blocks"] = _prepend("layers", blk.sblock_logical(cfg))
+        out["shared_block"] = blk.tblock_logical(cfg)
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ("embed", "vocab")
+    if cfg.mtp:
+        out["mtp"] = {
+            "proj": ("embed", "embed"),
+            "ln": ("embed_act",),
+            "block": blk.tblock_logical(cfg, use_moe=cfg.family == "moe"),
+        }
+    return out
+
+
+# ==========================================================================
+# caches
+# ==========================================================================
+def _stack_cache(proto, n: int):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((n, *a.shape), a.dtype), proto)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None):
+    dtype = dtype or cfg.dtype
+    if cfg.family in ("dense", "audio", "vlm"):
+        proto = blk.tblock_cache_init(cfg, batch, max_len, dtype)
+        return {"layers": _stack_cache(proto, cfg.n_layers)}
+    if cfg.family == "moe":
+        proto = blk.tblock_cache_init(cfg, batch, max_len, dtype)
+        out = {"layers": _stack_cache(proto,
+                                      cfg.n_layers - cfg.first_dense_layers)}
+        if cfg.first_dense_layers:
+            out["dense_layers"] = _stack_cache(proto, cfg.first_dense_layers)
+        return out
+    if cfg.family == "ssm":
+        proto = blk.sblock_cache_init(cfg, batch, dtype)
+        return {"layers": _stack_cache(proto, cfg.n_layers)}
+    if cfg.family == "hybrid":
+        sproto = blk.sblock_cache_init(cfg, batch, dtype)
+        tproto = blk.tblock_cache_init(cfg, batch, max_len, dtype)
+        n_shared = (cfg.n_layers // cfg.shared_attn_every
+                    if cfg.shared_attn_every else 0)
+        return {"layers": _stack_cache(sproto, cfg.n_layers),
+                "shared": _stack_cache(tproto, max(1, n_shared))}
+    raise ValueError(cfg.family)
+
+
+def cache_logical(cfg: ModelConfig):
+    if cfg.family in ("dense", "audio", "vlm", "moe"):
+        proto = _prepend("layers", blk.tblock_cache_logical(cfg))
+        out = {"layers": proto}
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            out["dense_layers"] = proto
+        return out
+    if cfg.family == "ssm":
+        return {"layers": _prepend("layers", blk.sblock_cache_logical(cfg))}
+    if cfg.family == "hybrid":
+        return {"layers": _prepend("layers", blk.sblock_cache_logical(cfg)),
+                "shared": _prepend("layers", blk.tblock_cache_logical(cfg))}
+    raise ValueError(cfg.family)
+
+
+# ==========================================================================
+# forward
+# ==========================================================================
+def _run_stack(block_apply, stacked_params, x, cfg, caches=None):
+    """Run a homogeneous stack of blocks (scan or unrolled)."""
+    n = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    x = constrain(x, "batch", "seq", "embed_act")
+    if cfg.scan_layers:
+        if caches is None:
+            fn = block_apply
+            if cfg.remat:
+                fn = jax.checkpoint(block_apply)
+
+            def body(carry, p):
+                y, nc, aux = fn(p, carry[0], None)
+                y = constrain(y, "batch", "seq", "embed_act")
+                return (y, carry[1] + aux), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       stacked_params)
+            return x, None, aux
+
+        def body(carry, pc):
+            p, c = pc
+            y, nc, aux = block_apply(p, carry[0], c)
+            y = constrain(y, "batch", "seq", "embed_act")
+            return (y, carry[1] + aux), nc
+
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (stacked_params, caches))
+        return x, new_caches, aux
+    # unrolled (dry-run / cost-analysis mode)
+    fn = block_apply
+    if caches is None and cfg.remat:
+        fn = jax.checkpoint(block_apply)
+    aux = jnp.zeros((), jnp.float32)
+    new_layers = []
+    for i in range(n):
+        p = _layer_slice(stacked_params, i)
+        c = _layer_slice(caches, i) if caches is not None else None
+        x, nc, a = fn(p, x, c)
+        x = constrain(x, "batch", "seq", "embed_act")
+        aux = aux + a
+        if caches is not None:
+            new_layers.append(nc)
+    new_caches = None
+    if caches is not None:
+        new_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_layers)
+    return x, new_caches, aux
+
+
+def unembed(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Hidden (B, L, D) → logits (B, L, V); handles tied/untied heads."""
+    if cfg.tie_embeddings:
+        return unembed_apply(params["embed"], x, fp32=cfg.logits_fp32)
+    logits = jnp.einsum("bld,dv->blv", x, params["lm_head"])
+    return logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+
+
+def forward_hidden(
+    params,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,     # (B, L) int32
+    embeds: Optional[jnp.ndarray] = None,     # (B, P, D) modality stub
+    cache=None,
+    pos0=None,                                # scalar position offset
+) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (final hidden (B, L, D), new_cache, aux_loss).
+
+    The unembed projection is NOT applied — training computes the loss in
+    sequence chunks (``train.steps.chunked_cross_entropy``) so the
+    (B, L, vocab) fp32 logits tensor is never materialized (at the assigned
+    train_4k shapes that tensor would be up to ~0.8 TB), and serving
+    unembeds only the positions it needs.
+    """
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(cfg.dtype))
+    if tokens is not None:
+        parts.append(embed_apply(params["embed"], tokens))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    x = constrain(x, "batch", "seq", "embed_act")
+    b, l, _ = x.shape
+    if pos0 is None:
+        pos0 = jnp.zeros((), jnp.int32)
+    positions = pos0 + jnp.arange(l)
+
+    def t_apply(p, h, c, use_moe=False):
+        return blk.tblock_apply(p, h, cfg, positions, c, use_moe=use_moe)
+
+    def s_apply(p, h, c):
+        return blk.sblock_apply(p, h, cfg, c)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+
+    if cfg.family in ("dense", "audio", "vlm"):
+        caches = cache["layers"] if cache is not None else None
+        x, nc, aux = _run_stack(t_apply, params["blocks"], x, cfg, caches)
+        if cache is not None:
+            new_cache = {"layers": nc}
+    elif cfg.family == "moe":
+        new_cache = {} if cache is not None else None
+        if cfg.first_dense_layers:
+            caches = cache["dense_layers"] if cache is not None else None
+            x, nc, a1 = _run_stack(
+                functools.partial(t_apply, use_moe=False),
+                params["dense_blocks"], x, cfg, caches)
+            aux = aux + a1
+            if cache is not None:
+                new_cache["dense_layers"] = nc
+        caches = cache["layers"] if cache is not None else None
+        x, nc, a2 = _run_stack(
+            functools.partial(t_apply, use_moe=True),
+            params["blocks"], x, cfg, caches)
+        aux = aux + a2
+        if cache is not None:
+            new_cache["layers"] = nc
+    elif cfg.family == "ssm":
+        caches = cache["layers"] if cache is not None else None
+        x, nc, aux = _run_stack(s_apply, params["blocks"], x, cfg, caches)
+        if cache is not None:
+            new_cache = {"layers": nc}
+    elif cfg.family == "hybrid":
+        x, new_cache, aux = _hybrid_forward(params, x, cfg, positions, cache)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return x, new_cache, aux
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: Optional[jnp.ndarray] = None,
+    embeds: Optional[jnp.ndarray] = None,
+    cache=None,
+    pos0=None,
+) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Returns (logits (B, L, V) fp32, new_cache, aux_loss) — materializes
+    the full logits tensor; use only at decode/small shapes or in tests."""
+    x, new_cache, aux = forward_hidden(
+        params, cfg, tokens=tokens, embeds=embeds, cache=cache, pos0=pos0)
+    return unembed(params, cfg, x), new_cache, aux
+
+
+def _hybrid_forward(params, x, cfg, positions, cache):
+    """zamba2: groups of ``shared_attn_every`` mamba blocks, then the
+    weight-shared attention block (fresh KV cache per application).
+
+    Training (no cache) honors ``cfg.remat`` per block — without it the
+    unrolled hybrid stack saves every SSM intermediate (the dry-run measured
+    a 3 TB/device peak at train_4k; per-block remat + sequence-parallel
+    residuals brings that down ~400×, EXPERIMENTS.md §Perf iteration 1).
+    """
+    every = cfg.shared_attn_every or cfg.n_layers + 1
+    n_shared = cfg.n_layers // every if cfg.shared_attn_every else 0
+    aux = jnp.zeros((), jnp.float32)
+    new_s_layers = []
+    new_shared = []
+
+    # training path: scan over (mamba-group + shared block) super-layers —
+    # compact HLO (one group body instead of 54 inlined blocks) and one
+    # remat boundary per group (EXPERIMENTS.md §Perf iterations 1.1/1.2)
+    if (cache is None and cfg.scan_layers and cfg.shared_attn_every
+            and cfg.n_layers % every == 0 and n_shared >= 1):
+        return _hybrid_scan_forward(params, x, cfg, positions, every,
+                                    n_shared)
+
+    s_fn = lambda p, h, c: blk.sblock_apply(p, h, cfg, c)
+    t_fn = lambda p, h, c: blk.tblock_apply(p, h, cfg, positions, c)
+    if cache is None and cfg.remat:
+        s_fn = jax.checkpoint(s_fn)
+        t_fn = jax.checkpoint(t_fn)
+
+    layer = 0
+    for g in range(max(1, (cfg.n_layers + every - 1) // every)):
+        hi = min(layer + every, cfg.n_layers)
+        for i in range(layer, hi):
+            p = _layer_slice(params["blocks"], i)
+            c = (_layer_slice(cache["layers"], i)
+                 if cache is not None else None)
+            x, nc, a = s_fn(p, x, c)
+            x = constrain(x, "batch", "seq", "embed_act")
+            aux = aux + a
+            if cache is not None:
+                new_s_layers.append(nc)
+        layer = hi
+        if cfg.shared_attn_every and (g < n_shared):
+            c = (_layer_slice(cache["shared"], g)
+                 if cache is not None else None)
+            x, nc, a = t_fn(params["shared_block"], x, c)
+            x = constrain(x, "batch", "seq", "embed_act")
+            aux = aux + a
+            if cache is not None:
+                new_shared.append(nc)
+    new_cache = None
+    if cache is not None:
+        stack = lambda items: jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *items)
+        new_cache = {"layers": stack(new_s_layers),
+                     "shared": (stack(new_shared) if new_shared
+                                else cache["shared"])}
+    return x, new_cache, aux
+
+
+def _hybrid_scan_forward(params, x, cfg, positions, every: int,
+                         n_shared: int):
+    """Scan over super-layers: ``every`` mamba blocks + one shared block.
+
+    Mamba parameters reshape from (n_layers, ...) to (n_shared, every, ...)
+    on the scan's leading axis; the weight-shared attention block rides in
+    the closure (loop-invariant — XLA hoists it).
+    """
+    grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape(n_shared, every, *a.shape[1:]), params["blocks"])
+
+    def group_body(h, gp):
+        a = jnp.zeros((), jnp.float32)
+        for i in range(every):
+            p = jax.tree_util.tree_map(lambda t: t[i], gp)
+            h, _, ai = blk.sblock_apply(p, h, cfg, None)
+            h = constrain(h, "batch", "seq", "embed_act")
+            a = a + ai
+        h, _, ai = blk.tblock_apply(params["shared_block"], h, cfg,
+                                    positions, None)
+        h = constrain(h, "batch", "seq", "embed_act")
+        return h, a + ai
+
+    fn = jax.checkpoint(group_body) if cfg.remat else group_body
+
+    def body(carry, gp):
+        h, acc = carry
+        h, a = fn(h, gp)
+        return (h, acc + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), grouped)
+    # trailing mamba blocks beyond the last shared application (none for
+    # zamba2's 54 = 9·6, kept for config generality)
+    rem = cfg.n_layers - n_shared * every
+    for i in range(cfg.n_layers - rem, cfg.n_layers):
+        p = _layer_slice(params["blocks"], i)
+        x, _, a = blk.sblock_apply(p, x, cfg, None)
+        x = constrain(x, "batch", "seq", "embed_act")
+        aux = aux + a
+    return x, None, aux
+
+
+# ==========================================================================
+# MTP head (deepseek multi-token prediction)
+# ==========================================================================
+def mtp_hidden(params, cfg: ModelConfig, hidden: jnp.ndarray,
+               next_tokens: jnp.ndarray, positions) -> jnp.ndarray:
+    """Predict token t+2 from (hidden_t, embed(token_{t+1})) — one MTP depth.
+
+    Returns the MTP head's hidden states (B, L, D); the caller unembeds
+    (chunked, like the main loss — the MTP logits tensor is just as big).
+    """
+    mtp = params["mtp"]
+    nxt = embed_apply(params["embed"], next_tokens)
+    h = jnp.concatenate(
+        [rms_norm(hidden, mtp["ln"], cfg.norm_eps), nxt], axis=-1)
+    h = jnp.einsum("ble,ed->bld", h, mtp["proj"])
+    h, _, _ = blk.tblock_apply(mtp["block"], h, cfg, positions,
+                               use_moe=cfg.family == "moe")
+    return h
+
+
+def mtp_logits(params, cfg: ModelConfig, hidden: jnp.ndarray,
+               next_tokens: jnp.ndarray, positions) -> jnp.ndarray:
+    h = mtp_hidden(params, cfg, hidden, next_tokens, positions)
+    return unembed(params, cfg, h)

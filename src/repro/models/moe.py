@@ -1,0 +1,129 @@
+"""Mixture-of-experts FFN with top-k routing and expert parallelism.
+
+TPU-native formulation (GShard grouped dispatch): tokens are reshaped into
+``(groups, group_size)`` and each group routes into a dense
+``(experts, capacity)`` slot buffer with one-hot dispatch/combine einsums,
+so the whole layer is MXU matmuls — no host-side gather/scatter.  The group
+axis carries the ``batch`` logical name (sharded over the data axes) and
+expert weights carry the ``experts`` logical axis (sharded over the
+``model`` mesh axis = EP); XLA inserts the all-to-all dispatch collectives
+automatically under GSPMD.
+
+Grouping is what keeps the one-hot dispatch tensor sub-quadratic: flat
+(T, E, C) dispatch is O(T²·k) elements at T = 10⁶ train tokens (petabytes);
+grouped (G, S, E, C) with S = ``moe_group_size`` tokens per group is
+O(T·E·C_g) with C_g = ceil(S·k·cf/E) — megabytes per device at the assigned
+shapes.  Per-group capacity semantics (tokens overflowing their group's
+expert slots are dropped) is standard GShard/Switch behavior, and the
+Switch-style auxiliary loss keeps the router near-uniform so drops stay
+rare.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, mlp_apply, mlp_init, mlp_logical
+from repro.sharding.activations import constrain
+
+
+def moe_init(key, cfg):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    k_router, k_w, k_shared = jax.random.split(key, 3)
+    kg, ku, kd = jax.random.split(k_w, 3)
+    params = {
+        "router": dense_init(k_router, (d, e), d, jnp.float32),
+        "w_gate": dense_init(kg, (e, d, f), d, cfg.dtype),
+        "w_up": dense_init(ku, (e, d, f), d, cfg.dtype),
+        "w_down": dense_init(kd, (e, f, d), f, cfg.dtype),
+    }
+    if cfg.n_shared_experts:
+        params["shared"] = mlp_init(
+            k_shared, cfg, d_ff=cfg.moe_d_ff * cfg.n_shared_experts
+        )
+    return params
+
+
+def moe_logical(cfg):
+    out = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "embed", "expert_mlp"),
+        "w_up": ("experts", "embed", "expert_mlp"),
+        "w_down": ("experts", "expert_mlp", "embed"),
+    }
+    if cfg.n_shared_experts:
+        out["shared"] = mlp_logical(cfg)
+    return out
+
+
+def _capacity(group_size: int, cfg) -> int:
+    raw = group_size * cfg.top_k / cfg.n_experts * cfg.capacity_factor
+    return max(cfg.top_k, int(math.ceil(raw / 8.0)) * 8)   # pad to 8 (VREG)
+
+
+def _group(t: int, cfg) -> int:
+    """Tokens per dispatch group: ``moe_group_size`` capped at T."""
+    s = min(cfg.moe_group_size, t)
+    while t % s:               # t is B·L (powers of two at assigned shapes)
+        s -= 1
+    return s
+
+
+def moe_apply(params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output (B,L,D), aux_loss scalar)."""
+    b, l, d = x.shape
+    t = b * l
+    e, k = cfg.n_experts, cfg.top_k
+    s = _group(t, cfg)
+    g = t // s
+    c = _capacity(s, cfg)
+    xg = x.reshape(g, s, d)                                # groups follow batch
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"])                  # (G, S, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)          # (G, S, k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)  # renormalize top-k
+
+    # Switch-style load-balance auxiliary loss (global mean over groups).
+    me = jnp.mean(probs, axis=(0, 1))                                # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )
+    aux = e * jnp.sum(me * ce)
+
+    # Position of each (token, k) within its group-local expert buffer.
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)      # (G,S,k,E)
+    flat = onehot.reshape(g, s * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (G,S*k,E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(g, s, k)          # (G,S,k)
+    keep = (pos < c).astype(jnp.float32)
+    gate_vals = gate_vals * keep
+
+    # dispatch (G, S, E, C) — one-hot over both expert id and capacity slot
+    pos_oh = jax.nn.one_hot(pos, c, dtype=jnp.float32) * keep[..., None]
+    disp = jnp.einsum("gske,gskc->gsec", onehot, pos_oh)
+    comb = jnp.einsum("gske,gskc,gsk->gsec", onehot, pos_oh, gate_vals)
+    disp = constrain(disp, "batch", None, "experts", None)
+    comb = constrain(comb, "batch", None, "experts", None)
+
+    # keep the group axis through the expert compute so GSPMD shards it
+    # over data while experts shard over model (2-D EP placement)
+    expert_in = jnp.einsum("gsec,gsd->egcd", disp.astype(cfg.dtype), xg)
+    expert_in = constrain(expert_in, "experts", "batch", None, "embed_act")
+    gate = jnp.einsum("egcd,edf->egcf", expert_in, params["w_gate"])
+    up = jnp.einsum("egcd,edf->egcf", expert_in, params["w_up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(cfg.dtype) * up
+    h = constrain(h, "experts", "batch", None, None)
+    expert_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    expert_out = constrain(expert_out, "experts", "batch", None, "embed_act")
+    out = jnp.einsum("egcd,gsec->gsd", expert_out, comb.astype(cfg.dtype))
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(params["shared"], xg)
+    return out.reshape(b, l, d), aux

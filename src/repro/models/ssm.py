@@ -1,0 +1,363 @@
+"""Selective state-space blocks: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+TPU adaptation of the CUDA selective-scan: the original fuses the recurrence
+into one kernel to avoid materializing per-timestep states.  On TPU we use a
+**chunked associative scan**: ``lax.scan`` over chunks of ``cfg.ssm_chunk``
+timesteps carries the (B, ..., d_state) state across chunks, and inside a
+chunk ``lax.associative_scan`` parallelizes the recurrence on the VPU.  Live
+scan buffers are O(B · chunk · d_inner · d_state) instead of O(B · L · ...),
+an 8–16× activation-memory reduction at L=4k — the knob shows up directly in
+the dry-run memory term (§Perf).
+
+Recurrence (both variants):  h_t = a_t ⊙ h_{t-1} + b_t,
+  a_t = exp(Δ_t A)        (elementwise decay)
+  b_t = Δ_t · B_t ⊗ x_t   (input injection)
+  y_t = C_t · h_t + D x_t
+
+Mamba1: per-channel A (d_inner, d_state), Δ from a low-rank projection.
+Mamba2: scalar A per head (SSD), B/C shared across head groups.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.sharding.activations import constrain
+
+Cache = dict
+
+
+def _assoc_combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def _chunk_inputs(arrs, chunk: int):
+    """Reshape (B, L, ...) arrays to (nc, B, chunk, ...), zero-padded."""
+    B, L = arrs[0].shape[0], arrs[0].shape[1]
+    pad = (-L) % chunk
+    out = []
+    for a in arrs:
+        if pad:
+            widths = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+            a = jnp.pad(a, widths)
+        nc = (L + pad) // chunk
+        out.append(jnp.moveaxis(
+            a.reshape(B, nc, chunk, *a.shape[2:]), 1, 0))
+    return out, (L + pad) // chunk
+
+
+def _fused_ssd_scan(dtx, bh, ch, dt, A, h0, chunk: int, state_dims=()):
+    """Fused chunked selective scan (the mamba recurrence):
+
+        h_t = exp(dt_t * A) (.) h_{t-1} + dtx_t (x) bh_t
+        y_t = <h_t, ch_t>_state
+
+    dtx: (B, L, *head) = Delta_t*x_t;  bh/ch: (B, L, [*head,] st);
+    dt: (B, L, di) (mamba1) or (B, L, nh) (mamba2);
+    A:  (di, st) per-channel-per-state (mamba1) or (nh,) scalar (mamba2).
+
+    Everything L-length and state-ranked — the (B, L, ..., st) decay,
+    injection and hidden-state tensors of the naive formulation — is built
+    *per chunk inside the scan body* and contracted away before the next
+    chunk, so HBM never holds an L-by-state tensor (EXPERIMENTS.md §Perf
+    iterations 1.2/3.1).  On the TPU target this body is the Pallas
+    ``ssm_scan`` kernel (kernels/ssm_scan); the ``pallas_equiv_ssm`` scope
+    lets the roofline charge kernel-boundary IO only.
+
+    Zero padding of the tail chunk is exact: dt=0 gives decay exp(0)=1 and
+    injection 0 (state preserved), and padded-step outputs are sliced off.
+
+    Returns (y (B, L, *head), h_last (B, *head, st)).
+    """
+    B, L = dtx.shape[0], dtx.shape[1]
+    chunk = min(chunk, L)
+    (dtx_c, bh_c, ch_c, dt_c), nc = _chunk_inputs(
+        [dtx, bh, ch, dt], chunk)
+    if state_dims:
+        bd = ("batch", *state_dims)
+        h0 = constrain(h0, *bd[: h0.ndim])
+
+    # jax.checkpoint: without it the scan's backward stacks every chunk's
+    # (B, c, *head, st) hidden states back into HBM (the dry-run measured
+    # those stacks as the dominant remaining traffic, §Perf iter. 1.3);
+    # with it, backward recomputes a chunk from its 4 small inputs + the
+    # (B, *head, st) carry — exactly what the Pallas kernel's VJP does.
+    @jax.checkpoint
+    def body(h, xs):
+        with jax.named_scope("pallas_equiv_ssm"):
+            dtx_k, bh_k, ch_k, dt_k = xs
+            if dtx_k.ndim == 3:   # mamba1: dtx (B,c,di); A (di,st)
+                decay = jnp.exp(dt_k[..., None] * A[None, None])
+                inject = dtx_k[..., None] * bh_k[:, :, None, :]
+                a_k = decay                                  # (B,c,di,st)
+            else:                 # mamba2: dtx (B,c,nh,hd); A (nh,)
+                decay = jnp.exp(dt_k * A[None, None])        # (B,c,nh)
+                inject = dtx_k[..., None] * bh_k[:, :, :, None, :]
+                a_k = jnp.broadcast_to(
+                    decay[..., None, None], inject.shape)
+            prod, acc = jax.lax.associative_scan(
+                _assoc_combine, (a_k, inject), axis=1)
+            h_all = prod * h[:, None] + acc
+            y_k = (jnp.einsum("bcds,bcs->bcd", h_all, ch_k)
+                   if dtx_k.ndim == 3
+                   else jnp.einsum("bchds,bchs->bchd", h_all, ch_k))
+            return h_all[:, -1], y_k
+
+    h_last, y_c = jax.lax.scan(body, h0, (dtx_c, bh_c, ch_c, dt_c))
+    y = jnp.moveaxis(y_c, 0, 1).reshape(
+        B, nc * chunk, *y_c.shape[3:])[:, :L]
+    return y, h_last
+
+
+def _chunked_linear_scan(a, b, h0, chunk: int, state_dims=()):
+    """Scan h_t = a_t h_{t-1} + b_t over axis=1 (length L) in chunks.
+
+    a, b: (B, L, ...state dims); h0: (B, ...state dims).
+    ``state_dims``: logical names of the state dims (sharding constraints
+    for the scan inputs/carry — GSPMD left alone replicates them).
+    Returns (h_all (B, L, ...), h_last (B, ...)).
+    """
+    B, L = a.shape[0], a.shape[1]
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        # identity-extend: a=1, b=0 steps leave the state untouched
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2)
+        a = jnp.pad(a, widths, constant_values=1.0)
+        b = jnp.pad(b, widths)
+    lp = L + pad
+    nc = lp // chunk
+    state_shape = a.shape[2:]
+    a_c = a.reshape(B, nc, chunk, *state_shape).swapaxes(0, 1)
+    b_c = b.reshape(B, nc, chunk, *state_shape).swapaxes(0, 1)
+    if state_dims:
+        sd = (None, "batch", None, *state_dims)
+        a_c = constrain(a_c, *sd)
+        b_c = constrain(b_c, *sd)
+        h0 = constrain(h0, "batch", *state_dims)
+
+    def step(h, ab):
+        a_k, b_k = ab                                     # (B, chunk, ...)
+        prod, acc = jax.lax.associative_scan(
+            _assoc_combine, (a_k, b_k), axis=1
+        )
+        h_t = prod * h[:, None] + acc                     # (B, chunk, ...)
+        return h_t[:, -1], h_t
+
+    h_last, h_all = jax.lax.scan(step, h0, (a_c, b_c))
+    h_all = h_all.swapaxes(0, 1).reshape(B, lp, *state_shape)[:, :L]
+    return h_all, h_last
+
+
+def _causal_conv(x, w, b, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv1d.  x: (B, L, C); w: (K, C); b: (C,).
+
+    ``state``: (B, K-1, C) carry of the previous K-1 inputs (decode), or None
+    (training: left-zero padding).  Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                # (B, K-1+L, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None] for i in range(k)
+    ) + b[None, None]
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype
+    )
+    return y, new_state
+
+
+# =========================================================================
+# Mamba1
+# =========================================================================
+def mamba1_init(key, cfg):
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, kc = cfg.dt_rank_eff, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    a_init = jnp.broadcast_to(
+        jnp.arange(1, st + 1, dtype=jnp.float32)[None], (di, st)
+    )
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), d, cfg.dtype),
+        "conv_w": dense_init(ks[1], (kc, di), kc, cfg.dtype),
+        "conv_b": jnp.zeros((di,), cfg.dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * st), di, cfg.dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtr, cfg.dtype),
+        "dt_bias": jnp.full((di,), -4.0, cfg.dtype),   # softplus ≈ small Δ
+        "A_log": jnp.log(a_init).astype(jnp.float32),  # fp32 for stability
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), di, cfg.dtype),
+    }
+
+
+def mamba1_logical(cfg):
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "x_proj": ("ssm_inner", None),
+        "dt_proj": ("dt_rank", "ssm_inner"),
+        "dt_bias": ("ssm_inner",),
+        "A_log": ("ssm_inner", "ssm_state"),
+        "D": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def mamba1_cache_init(cfg, batch: int, dtype) -> Cache:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba1_cache_logical(cfg):
+    return {
+        "conv": ("batch", "conv", "ssm_inner"),
+        "h": ("batch", "ssm_inner", "ssm_state"),
+        "pos": (),
+    }
+
+
+def mamba1_apply(
+    params, x: jnp.ndarray, cfg, cache: Optional[Cache] = None,
+) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    b, l, _ = x.shape
+    di, st, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_eff
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xs, z = xz[..., :di], xz[..., di:]
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xs = jax.nn.silu(xs.astype(jnp.float32))
+    dbc = jnp.einsum("ble,ef->blf", xs.astype(cfg.dtype), params["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,re->ble", dbc[..., :dtr], params["dt_proj"])
+        .astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                     # (B, L, di)
+    bmat = dbc[..., dtr : dtr + st].astype(jnp.float32)   # (B, L, st)
+    cmat = dbc[..., dtr + st :].astype(jnp.float32)       # (B, L, st)
+    a_mat = -jnp.exp(params["A_log"].astype(jnp.float32)) # (di, st)
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((b, di, st), jnp.float32))
+    # fused chunk scan: the (B,L,di,st) decay/injection/state tensors only
+    # ever exist chunk-locally (§Perf iteration 3.1)
+    y, h_last = _fused_ssd_scan(
+        dt * xs, bmat, cmat, dt, a_mat, h0, cfg.ssm_chunk,
+        state_dims=("ssm_inner", "ssm_state"))
+    y = y + params["D"].astype(jnp.float32)[None, None] * xs
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("ble,ed->bld", y.astype(cfg.dtype), params["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": h_last, "pos": cache["pos"] + l}
+    return out, new_cache
+
+
+# =========================================================================
+# Mamba2 (SSD): scalar decay per head, grouped B/C
+# =========================================================================
+def mamba2_init(key, cfg):
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, g, kc = cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_conv
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * di + 2 * g * st + nh
+    conv_dim = di + 2 * g * st
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), d, cfg.dtype),
+        "conv_w": dense_init(ks[1], (kc, conv_dim), kc, cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "dt_bias": jnp.full((nh,), -4.0, jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), cfg.dtype),
+        "out_proj": dense_init(ks[2], (di, d), di, cfg.dtype),
+    }
+
+
+def mamba2_logical(cfg):
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm_w": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def mamba2_cache_init(cfg, batch: int, dtype) -> Cache:
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "h": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba2_cache_logical(cfg):
+    return {
+        "conv": ("batch", "conv", "ssm_inner"),
+        "h": ("batch", "ssm_heads", None, "ssm_state"),
+        "pos": (),
+    }
+
+
+def mamba2_apply(
+    params, x: jnp.ndarray, cfg, cache: Optional[Cache] = None,
+) -> Tuple[jnp.ndarray, Optional[Cache]]:
+    b, l, _ = x.shape
+    di, st = cfg.d_inner, cfg.ssm_state
+    nh, hd, g = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * g * st]
+    dt = proj[..., di + di + 2 * g * st :]                # (B, L, nh)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs = xbc[..., :di].reshape(b, l, nh, hd)              # (B,L,nh,hd)
+    bmat = xbc[..., di : di + g * st].reshape(b, l, g, st)
+    cmat = xbc[..., di + g * st :].reshape(b, l, g, st)
+    heads_per_group = nh // g
+    bh = jnp.repeat(bmat, heads_per_group, axis=2)        # (B,L,nh,st)
+    ch = jnp.repeat(cmat, heads_per_group, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None])
+    a = -jnp.exp(params["A_log"])                         # (nh,)
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((b, nh, hd, st), jnp.float32))
+    # fused chunk scan: no (B,L,nh,hd,st) tensor in HBM (§Perf iter. 1.2)
+    y, h_last = _fused_ssd_scan(
+        dt[..., None] * xs, bh, ch, dt, a, h0, cfg.ssm_chunk,
+        state_dims=("ssm_heads", None, "ssm_state"))
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(b, l, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(gated), axis=-1, keepdims=True)
+    y = gated * jax.lax.rsqrt(var + cfg.norm_eps) \
+        * params["norm_w"].astype(jnp.float32)[None, None]
+    out = jnp.einsum("ble,ed->bld", y.astype(cfg.dtype), params["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "h": h_last, "pos": cache["pos"] + l}
+    return out, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimConfig, adamw_init, adamw_update, opt_state_logical,
+    warmup_cosine,
+)

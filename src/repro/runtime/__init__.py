@@ -1,0 +1,15 @@
+"""Multi-process fault-tolerant runtime (the paper's testbed analog).
+
+A :class:`~repro.runtime.cluster.Cluster` runs N worker *processes* grouped
+into logical *nodes* (``procs_per_node``) with an optional spare-node pool.
+The coordinator (threads in the launching process — the role a job scheduler
+/ Borg-Pathways control plane plays on a real fleet) mediates collectives,
+detects fail-stop failures via connection EOF + heartbeat staleness +
+collective deadlines (straggler mitigation), and executes the ULFM recovery
+recipe with REUSE / NO-REUSE spawn policies.
+
+Fault model (paper §5.3): ``cluster.kill(rank)`` / ``cluster.kill_node(n)``
+deliver SIGKILL — the paper's ``pkill -9`` — and in-application injection is
+available by raising from the worker fn.
+"""
+from repro.runtime.cluster import Cluster  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.sharding.logical import (  # noqa: F401
+    LogicalRules,
+    DEFAULT_RULES,
+    spec_for,
+    shard_specs,
+)

@@ -1,0 +1,79 @@
+"""Activation sharding constraints via an ambient LogicalRules context.
+
+GSPMD picks shardings for loop carries and large intermediates by
+propagation heuristics; at 256–512 devices a bad pick (e.g. replicating the
+batch across the model axis inside the layer-scan carry — observed, see
+EXPERIMENTS.md §Dry-run) costs 10× memory.  Model code therefore pins the
+handful of tensors that matter (block inputs/outputs, scan carries, MoE
+dispatch buffers, CE logit chunks) with ``constrain(x, *logical_dims)``.
+
+The rules are ambient (a context var installed by the step builders /
+launchers around tracing) so pure model code stays mesh-agnostic; outside
+any context ``constrain`` is an exact no-op — tests and single-device runs
+never see it.  Same shape-aware divisibility fallback as parameter specs.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding.logical import LogicalRules
+
+_RULES: contextvars.ContextVar[Optional[LogicalRules]] = \
+    contextvars.ContextVar("craft_activation_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[LogicalRules]):
+    token = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> Optional[LogicalRules]:
+    return _RULES.get()
+
+
+def constrain(x, *dims):
+    """Pin ``x``'s sharding to the logical ``dims`` (no-op without rules)."""
+    rules = _RULES.get()
+    if rules is None or not hasattr(x, "shape"):
+        return x
+    if len(dims) != x.ndim:
+        raise ValueError(
+            f"constrain: {len(dims)} dims for rank-{x.ndim} tensor")
+    spec = rules.spec(*dims, shape=x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def constrain_tree(tree, logical_tree):
+    """Pin a pytree's sharding to its logical dims (no-op without rules).
+
+    Used on gradient trees: GSPMD otherwise all-reduces weight gradients in
+    full (2x wire) and slices afterwards; declaring the target (= parameter)
+    sharding at the grad production site turns that into reduce-scatter
+    (§Perf iteration 2.2).
+    """
+    rules = _RULES.get()
+    if rules is None:
+        return tree
+    import jax as _jax
+
+    def is_dims(x):
+        return isinstance(x, tuple) and all(
+            isinstance(d, (str, type(None))) for d in x)
+
+    def apply(dims, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim != len(dims):
+            return leaf
+        return constrain(leaf, *dims)
+
+    return _jax.tree_util.tree_map(apply, logical_tree, tree,
+                                   is_leaf=is_dims)

@@ -1,0 +1,145 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP over the production mesh).
+
+Every parameter and activation declares *logical* dimension names; a rule
+table maps them onto mesh axes.  The production mesh is ``("data", "model")``
+single-pod and ``("pod", "data", "model")`` multi-pod (launch/mesh.py).
+
+Default placement (MaxText-style 2-D sharding):
+
+  * ``batch``   → ("pod", "data")   — data parallelism across pods + hosts
+  * ``embed``   → "data"            — FSDP: weights sharded over the DP axis
+                                       (all-gathered per layer on use)
+  * ``heads`` / ``mlp`` / ``vocab`` / ``kv_heads`` / ``ssm_inner`` → "model"
+                                     — tensor parallelism (Megatron split)
+  * ``experts`` → "model"           — expert parallelism for MoE
+  * everything else (seq, head_dim, ssm_state, layers, ...) replicated.
+
+Uneven divisions (e.g. 56 heads over 16-way model axis) are allowed —
+GSPMD pads — and the padding waste is surfaced by the roofline's
+MODEL_FLOPS / HLO_FLOPS ratio rather than hidden.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",          # FSDP axis for weights
+    "embed_act": None,        # activations keep d_model replicated
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    # NOTE (§Perf iteration 3.2, REFUTED): sharding experts over
+    # (model, data) — one deepseek expert per chip — looked like it would
+    # remove the per-layer FSDP all-gather of expert weights, but GSPMD
+    # cannot express the token all-to-all that placement needs through the
+    # one-hot dispatch einsums: it replicated the activations instead
+    # (collective term 104 s → 1326 s).  True 2-D EP needs a shard_map
+    # dispatch path (future work); EP stays on the model axis.
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    "latent": "model",        # MLA compressed-KV dim
+    "dt_rank": None,
+    "capacity": None,
+    "patches": None,
+}
+
+
+class LogicalRules:
+    """A rule table bound to a mesh; filters axes the mesh doesn't have."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def physical(self, logical: Optional[str]) -> Axis:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        ax = self.rules[logical]
+        names = set(self.mesh.axis_names)
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in names else None
+        filtered = tuple(a for a in ax if a in names)
+        return filtered if filtered else None
+
+    def spec(self, *logical_dims: Optional[str],
+             shape: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for a tensor whose dims carry these logical names.
+
+        With ``shape`` given, every candidate mesh axis must divide the dim
+        size; non-dividing axes are dropped (prefix-wise for tuple rules) and
+        the dim degrades gracefully toward replication.  This is how e.g. a
+        ``global_batch=1`` long-context decode input or an ``n_kv_heads=2``
+        cache stays lowerable on the fixed 16-way production axes — the
+        resulting redundant compute is *surfaced* by the roofline's
+        MODEL_FLOPS/HLO_FLOPS ratio, not hidden.
+        """
+        used: set = set()
+        axis_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        phys = []
+        for i, dim in enumerate(logical_dims):
+            ax = self.physical(dim)
+            # an axis may appear at most once in a PartitionSpec
+            if ax is None:
+                phys.append(None)
+                continue
+            axs = (ax,) if isinstance(ax, str) else ax
+            axs = tuple(a for a in axs if a not in used)
+            if shape is not None:
+                kept, prod = [], 1
+                for a in axs:
+                    if shape[i] % (prod * axis_sizes[a]) == 0:
+                        kept.append(a)
+                        prod *= axis_sizes[a]
+                    else:
+                        break  # keep a contiguous prefix so sizes stay exact
+                axs = tuple(kept)
+            used.update(axs)
+            if not axs:
+                phys.append(None)
+            elif len(axs) == 1:
+                phys.append(axs[0])
+            else:
+                phys.append(axs)
+        return P(*phys)
+
+    def sharding(self, *logical_dims: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical_dims))
+
+
+def spec_for(rules: LogicalRules, logical_dims: Sequence[Optional[str]]) -> P:
+    return rules.spec(*logical_dims)
+
+
+def _is_dims(x) -> bool:
+    return isinstance(x, tuple) and all(
+        isinstance(d, (str, type(None))) for d in x)
+
+
+def shard_specs(rules: LogicalRules, logical_tree, shapes=None):
+    """Map a pytree whose leaves are tuples of logical dim names to
+    PartitionSpecs.  ``shapes``: matching pytree of array-likes (anything
+    with ``.shape``) enabling the divisibility fallback of ``spec``."""
+    if shapes is None:
+        return jax.tree_util.tree_map(
+            lambda dims: rules.spec(*dims), logical_tree, is_leaf=_is_dims)
+    return jax.tree_util.tree_map(
+        lambda dims, arr: rules.spec(*dims, shape=arr.shape),
+        logical_tree, shapes, is_leaf=_is_dims)

@@ -1,0 +1,4 @@
+from repro.train.steps import (  # noqa: F401
+    TrainStepConfig, make_train_step, make_prefill, make_decode_step,
+    cross_entropy,
+)

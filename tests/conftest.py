@@ -1,0 +1,30 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the single real
+CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.env import CraftEnv
+
+
+@pytest.fixture()
+def env(tmp_path):
+    """A CraftEnv writing into the test's tmp dir (sync, node tier on)."""
+    return CraftEnv.capture({
+        "CRAFT_CP_PATH": str(tmp_path / "pfs"),
+        "CRAFT_NODE_CP_PATH": str(tmp_path / "node"),
+    })
+
+
+@pytest.fixture()
+def env_pfs_only(tmp_path):
+    return CraftEnv.capture({
+        "CRAFT_CP_PATH": str(tmp_path / "pfs"),
+        "CRAFT_USE_SCR": "0",
+    })
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,391 @@
+"""Checkpoint/restart semantics (paper §2: Listings 2/5, Table 2 knobs)."""
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Box, Checkpoint, CheckpointError, CpBase
+from repro.core.env import CraftEnv
+
+
+def make_cp(name, env, data=None):
+    cp = Checkpoint(name, env=env)
+    for k, v in (data or {}).items():
+        cp.add(k, v)
+    return cp
+
+
+# ---------------------------------------------------------------- lifecycle
+class TestLifecycle:
+    def test_add_after_commit_raises(self, env):
+        cp = make_cp("c", env, {"x": Box(1)})
+        cp.commit()
+        with pytest.raises(CheckpointError, match="committed"):
+            cp.add("y", Box(2))
+
+    def test_write_before_commit_raises(self, env):
+        cp = make_cp("c", env, {"x": Box(1)})
+        with pytest.raises(CheckpointError, match="commit"):
+            cp.update_and_write()
+
+    def test_empty_commit_raises(self, env):
+        with pytest.raises(CheckpointError, match="no data"):
+            Checkpoint("c", env=env).commit()
+
+    def test_duplicate_key_raises(self, env):
+        cp = make_cp("c", env, {"x": Box(1)})
+        with pytest.raises(CheckpointError, match="duplicate"):
+            cp.add("x", Box(2))
+
+    def test_bad_names_raise(self, env):
+        with pytest.raises(ValueError):
+            Checkpoint("a/b", env=env)
+        cp = Checkpoint("ok", env=env)
+        with pytest.raises(ValueError):
+            cp.add("k/ey", Box(1))
+
+    def test_immutable_pod_needs_box(self, env):
+        cp = Checkpoint("c", env=env)
+        with pytest.raises(TypeError, match="Box"):
+            cp.add("x", 3)
+        with pytest.raises(TypeError, match="Box"):
+            cp.add("x", jnp.zeros((2,)))
+
+
+# ------------------------------------------------------------ round-tripping
+class TestRoundTrip:
+    def test_pod_types(self, env):
+        boxes = {
+            "i": Box(42), "f": Box(3.25), "c": Box(1 + 2j),
+            "b": Box(True), "s": Box("craft"),
+        }
+        cp = make_cp("pods", env, boxes)
+        cp.commit()
+        cp.update_and_write()
+
+        boxes2 = {k: Box(type(b.value)()) for k, b in boxes.items()}
+        cp2 = make_cp("pods", env, boxes2)
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        for k in boxes:
+            assert boxes2[k].value == boxes[k].value, k
+
+    def test_ndarray_in_place(self, env, rng):
+        arr = rng.standard_normal((7, 5))
+        ref = arr.copy()
+        cp = make_cp("nd", env, {"a": arr})
+        cp.commit()
+        cp.update_and_write()
+
+        arr2 = np.zeros_like(arr)
+        cp2 = make_cp("nd", env, {"a": arr2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        np.testing.assert_array_equal(arr2, ref)
+
+    def test_multiarray_column(self, env, rng):
+        arr = rng.standard_normal((6, 4))
+        cp = make_cp("col", env)
+        cp.add("a", arr, to_cp_col=2)
+        cp.commit()
+        cp.update_and_write()
+
+        arr2 = np.zeros_like(arr)
+        cp2 = make_cp("col", env)
+        cp2.add("a", arr2, to_cp_col=2)
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        np.testing.assert_array_equal(arr2[:, 2], arr[:, 2])
+        assert np.all(arr2[:, [0, 1, 3]] == 0)   # only the column was saved
+
+    def test_jax_array(self, env):
+        x = jnp.arange(24, dtype=jnp.float32).reshape(4, 6) * 1.5
+        box = Box(x)
+        cp = make_cp("jx", env, {"x": box})
+        cp.commit()
+        cp.update_and_write()
+
+        box2 = Box(jnp.zeros_like(x))
+        cp2 = make_cp("jx", env, {"x": box2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        np.testing.assert_array_equal(np.asarray(box2.value), np.asarray(x))
+
+    def test_jax_bfloat16(self, env):
+        x = jnp.asarray([[1.5, -2.25], [0.125, 7.0]], jnp.bfloat16)
+        box = Box(x)
+        cp = make_cp("bf", env, {"x": box})
+        cp.commit()
+        cp.update_and_write()
+        box2 = Box(jnp.zeros_like(x))
+        cp2 = make_cp("bf", env, {"x": box2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        np.testing.assert_array_equal(
+            np.asarray(box2.value, np.float32), np.asarray(x, np.float32))
+
+    def test_pytree(self, env, rng):
+        tree = {"w": jnp.asarray(rng.standard_normal((3, 3)), jnp.float32),
+                "b": np.arange(3.0), "meta": {"step": 11, "name": "x"}}
+        box = Box(tree)
+        cp = make_cp("tree", env, {"t": box})
+        cp.commit()
+        cp.update_and_write()
+
+        blank = {"w": jnp.zeros((3, 3)), "b": np.zeros(3),
+                 "meta": {"step": 0, "name": ""}}
+        box2 = Box(blank)
+        cp2 = make_cp("tree", env, {"t": box2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        assert box2.value["meta"] == {"step": 11, "name": "x"}
+        np.testing.assert_allclose(np.asarray(box2.value["w"]),
+                                   np.asarray(tree["w"]))
+
+    def test_shape_mismatch_raises(self, env, rng):
+        arr = rng.standard_normal((4, 4))
+        cp = make_cp("mm", env, {"a": arr})
+        cp.commit()
+        cp.update_and_write()
+        cp2 = make_cp("mm", env, {"a": np.zeros((5, 5))})
+        cp2.commit()
+        with pytest.raises(CheckpointError):
+            cp2.restart_if_needed()
+
+
+# ---------------------------------------------------------------- versioning
+class TestVersions:
+    def test_freq_gate(self, env):
+        b = Box(0)
+        cp = make_cp("fr", env, {"x": b})
+        cp.commit()
+        wrote = [cp.update_and_write(i, cp_freq=10) for i in range(1, 31)]
+        assert sum(wrote) == 3
+        assert cp.version == 3
+
+    def test_latest_version_wins(self, env):
+        b = Box(0)
+        cp = make_cp("v", env, {"x": b})
+        cp.commit()
+        for i in range(1, 4):
+            b.value = i * 100
+            cp.update_and_write()
+
+        b2 = Box(-1)
+        cp2 = make_cp("v", env, {"x": b2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        assert b2.value == 300
+        assert cp2.version == 3
+
+    def test_retention(self, env):
+        b = Box(0)
+        cp = make_cp("keep", env, {"x": b})
+        cp.commit()
+        for i in range(5):
+            cp.update_and_write()
+        vdirs = sorted((Path(env.cp_path) / "keep").glob("v-*"))
+        assert len(vdirs) <= env.keep_versions
+
+    def test_restart_skips_when_disabled(self, tmp_path):
+        env1 = CraftEnv.capture({"CRAFT_CP_PATH": str(tmp_path)})
+        b = Box(7)
+        cp = make_cp("d", env1, {"x": b})
+        cp.commit()
+        cp.update_and_write()
+
+        env2 = CraftEnv.capture({
+            "CRAFT_CP_PATH": str(tmp_path),
+            "CRAFT_READ_CP_ON_RESTART": "0",
+        })
+        b2 = Box(-1)
+        cp2 = make_cp("d", env2, {"x": b2})
+        cp2.commit()
+        assert not cp2.restart_if_needed()
+        assert b2.value == -1
+
+    def test_craft_enable_off_is_noop(self, tmp_path):
+        env0 = CraftEnv.capture({
+            "CRAFT_CP_PATH": str(tmp_path), "CRAFT_ENABLE": "0"})
+        b = Box(1)
+        cp = make_cp("off", env0, {"x": b})
+        cp.commit()
+        assert not cp.update_and_write()
+        assert not any(Path(tmp_path).glob("off/v-*"))
+
+
+# ----------------------------------------------------------------- async
+class TestAsync:
+    def _env(self, tmp_path, **extra):
+        return CraftEnv.capture({
+            "CRAFT_CP_PATH": str(tmp_path), "CRAFT_USE_SCR": "0", **extra})
+
+    def test_async_copy_mode(self, tmp_path):
+        env = self._env(tmp_path, CRAFT_WRITE_ASYNC="1")
+        arr = np.ones((256, 256))
+        cp = make_cp("as", env, {"a": arr})
+        cp.commit()
+        cp.update_and_write()
+        # mutate immediately — the copy-based snapshot must be isolated
+        arr[:] = -1.0
+        cp.wait()
+        arr2 = np.zeros_like(arr)
+        cp2 = make_cp("as", CraftEnv.capture(
+            {"CRAFT_CP_PATH": str(tmp_path), "CRAFT_USE_SCR": "0"}),
+            {"a": arr2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        assert np.all(arr2 == 1.0)     # pre-mutation snapshot was written
+        cp.close()
+
+    def test_zero_copy_needs_wait(self, tmp_path):
+        env = self._env(tmp_path, CRAFT_WRITE_ASYNC="1",
+                        CRAFT_WRITE_ASYNC_ZERO_COPY="1")
+        b = Box(123)
+        cp = make_cp("zc", env, {"x": b})
+        cp.commit()
+        cp.update_and_write()
+        cp.wait()                       # paper's fence before mutation
+        b.value = 456
+        b2 = Box(0)
+        cp2 = make_cp("zc", CraftEnv.capture(
+            {"CRAFT_CP_PATH": str(tmp_path), "CRAFT_USE_SCR": "0"}),
+            {"x": b2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        assert b2.value == 123
+        cp.close()
+
+    def test_async_many_versions_ordered(self, tmp_path):
+        env = self._env(tmp_path, CRAFT_WRITE_ASYNC="1")
+        b = Box(0)
+        cp = make_cp("seq", env, {"x": b})
+        cp.commit()
+        for i in range(1, 8):
+            b.value = i
+            cp.update_and_write()
+        cp.wait()
+        cp.close()
+        b2 = Box(-1)
+        cp2 = make_cp("seq", CraftEnv.capture(
+            {"CRAFT_CP_PATH": str(tmp_path), "CRAFT_USE_SCR": "0"}),
+            {"x": b2})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        assert b2.value == 7
+
+
+# ------------------------------------------------------------ extension API
+class rectDomain:
+    """Paper Listing 3's example class."""
+
+    def __init__(self, length, width):
+        self.length = length
+        self.width = width
+        self.val = np.zeros(length * width)
+
+
+class CpRectDomain(CpBase):
+    """Paper Listing 4's wrapper (read/write/update of an opaque class)."""
+
+    def __init__(self, dom: rectDomain):
+        self.dom = dom
+        self._buf = dom.val.copy()
+
+    def update(self):
+        np.copyto(self._buf, self.dom.val)
+
+    def write(self, dir_path, ctx):
+        from repro.core import storage  # noqa: F401
+        from repro.core.storage import write_array, write_json
+        write_json(dir_path / "dims.json",
+                   {"l": self.dom.length, "w": self.dom.width})
+        write_array(dir_path / "val.bin", self._buf, ctx)
+
+    def read(self, dir_path, ctx):
+        from repro.core.storage import read_array, read_json
+        dims = read_json(dir_path / "dims.json")
+        assert (dims["l"], dims["w"]) == (self.dom.length, self.dom.width)
+        self.dom.val[...] = read_array(dir_path / "val.bin", ctx)
+
+    def nbytes(self):
+        return self._buf.nbytes
+
+
+class TestExtension:
+    def test_cpbase_wrapper(self, env):
+        dom = rectDomain(3, 4)
+        dom.val[:] = np.arange(12.0)
+        cp = Checkpoint("rect", env=env)
+        cp.add("dom", CpRectDomain(dom))
+        cp.commit()
+        cp.update_and_write()
+
+        dom2 = rectDomain(3, 4)
+        cp2 = Checkpoint("rect", env=env)
+        cp2.add("dom", CpRectDomain(dom2))
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        np.testing.assert_array_equal(dom2.val, np.arange(12.0))
+
+    def test_register_adapter(self, env):
+        from repro.core.checkpointables import register_adapter
+
+        class Handle:
+            def __init__(self, v):
+                self.v = v
+
+        register_adapter(
+            lambda o: isinstance(o, Handle),
+            lambda o: __import__(
+                "repro.core.checkpointables", fromlist=["FuncCp"]
+            ).FuncCp(lambda: o.v, lambda nv: setattr(o, "v", nv)))
+        h = Handle(5)
+        cp = Checkpoint("h", env=env)
+        cp.add("h", h)
+        cp.commit()
+        cp.update_and_write()
+        h2 = Handle(0)
+        cp2 = Checkpoint("h", env=env)
+        cp2.add("h", h2)
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        assert h2.v == 5
+
+
+# ------------------------------------------------------------ integrity
+class TestIntegrity:
+    def test_corruption_detected(self, env_pfs_only, rng):
+        env = env_pfs_only
+        arr = rng.standard_normal((64,))
+        cp = make_cp("cor", env, {"a": arr})
+        cp.commit()
+        cp.update_and_write()
+        # flip bytes in the stored payload
+        (bin_file,) = (Path(env.cp_path) / "cor" / "v-1" / "a").glob("*.bin")
+        raw = bytearray(bin_file.read_bytes())
+        raw[-8] ^= 0xFF
+        bin_file.write_bytes(bytes(raw))
+
+        cp2 = make_cp("cor", env, {"a": np.zeros(64)})
+        cp2.commit()
+        with pytest.raises(CheckpointError):
+            cp2.restart_if_needed()
+
+    def test_torn_tmp_dir_swept(self, env_pfs_only):
+        env = env_pfs_only
+        b = Box(1)
+        cp = make_cp("torn", env, {"x": b})
+        cp.commit()
+        cp.update_and_write()
+        fake = Path(env.cp_path) / "torn" / ".tmp-v-9-deadbeef"
+        fake.mkdir(parents=True)
+        (fake / "junk").write_text("x")
+        cp2 = make_cp("torn", env, {"x": Box(0)})
+        cp2.commit()
+        assert cp2.restart_if_needed()
+        assert cp2.version == 1

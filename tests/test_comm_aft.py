@@ -1,0 +1,218 @@
+"""ULFM-semantics communicator (simulator backend) + AFT zones (paper §3)."""
+import threading
+import time
+
+import pytest
+
+from repro.core.aft import AftAbortedError, aft_zone
+from repro.core.comm import ProcFailedError, RevokedError
+from repro.core.comm_sim import SimComm, SimWorld
+from repro.core.env import CraftEnv
+
+
+def _env(**kw):
+    base = {"CRAFT_COMM_RECOVERY_POLICY": "NON-SHRINKING"}
+    base.update(kw)
+    return CraftEnv.capture(base)
+
+
+class TestCollectives:
+    def test_allreduce_sum(self):
+        world = SimWorld(4, env=_env())
+        out = world.run(lambda c: c.allreduce(c.rank + 1, op="sum"))
+        assert set(out.values()) == {10}
+
+    def test_allreduce_min_max(self):
+        world = SimWorld(3, env=_env())
+        out = world.run(lambda c: (c.allreduce(c.rank, "min"),
+                                   c.allreduce(c.rank, "max")))
+        assert set(out.values()) == {(0, 2)}
+
+    def test_bcast(self):
+        world = SimWorld(4, env=_env())
+        out = world.run(lambda c: c.bcast(c.rank * 11, root=2))
+        assert set(out.values()) == {22}
+
+    def test_channels_are_independent(self):
+        """Two channels used in different per-rank order must not deadlock
+        (the checkpoint writer thread's barrier runs on its own channel)."""
+        world = SimWorld(2, env=_env())
+
+        def fn(c):
+            results = {}
+
+            def writer():
+                results["w"] = c.allreduce(1, channel="cp:writer")
+
+            t = threading.Thread(target=writer)
+            t.start()
+            results["m"] = c.allreduce(2, channel="main")
+            t.join(timeout=10)
+            return (results["m"], results["w"])
+
+        out = world.run(fn)
+        assert set(out.values()) == {(4, 2)}
+
+
+class TestFailureDetection:
+    def test_dead_rank_breaks_collective(self):
+        world = SimWorld(3, env=_env())
+
+        def fn(c):
+            if c.rank == 0:
+                world.kill(1)
+            # rank 1 dies at its next comm call; others see ProcFailedError
+            try:
+                for _ in range(50):
+                    c.barrier()
+                    time.sleep(0.005)
+                return "no failure seen"
+            except ProcFailedError:
+                return "detected"
+
+        out = world.run(fn)
+        assert set(out.values()) == {"detected"}
+
+    def test_revoke_poisons_everyone(self):
+        world = SimWorld(4, env=_env())
+
+        def fn(c):
+            if c.rank == 2:
+                c.revoke()
+                return "revoker"
+            try:
+                while True:
+                    c.barrier()
+            except (RevokedError, ProcFailedError):
+                return "revoked"
+
+        out = world.run(fn)
+        assert sorted(out.values()) == ["revoked"] * 3 + ["revoker"]
+
+    def test_agree_works_among_survivors(self):
+        world = SimWorld(3, env=_env())
+
+        def fn(c):
+            if c.rank == 0:
+                world.kill(2)
+                time.sleep(0.02)
+            try:
+                c.barrier()
+            except ProcFailedError:
+                pass
+            return c.agree(True)
+
+        out = world.run(fn)
+        assert all(out.values())
+
+
+class TestRecovery:
+    @staticmethod
+    def _resilient_loop(world, policy, iters=20):
+        """Every member (survivor or replacement) runs the same loop: do
+        ``iters`` barriers on the current epoch, recovering on failure and
+        RESTARTING the loop — so collective sequences match per epoch."""
+
+        def fn(c):
+            recovered = False
+            while True:
+                try:
+                    if c.rank == 0 and c.epoch == 0:
+                        world.kill(world.n_procs - 1)
+                    for _ in range(iters):
+                        c.barrier()
+                        time.sleep(0.002)
+                    return ("recovered" if recovered else "fresh", c.size,
+                            c.last_recovery_stats())
+                except (ProcFailedError, RevokedError):
+                    try:
+                        c.revoke()
+                    except Exception:
+                        pass
+                    c = c.recover(policy=policy)
+                    recovered = True
+
+        return fn
+
+    @pytest.mark.parametrize("policy", ["SHRINKING", "NON-SHRINKING"])
+    def test_recover_after_kill(self, policy):
+        world = SimWorld(4, procs_per_node=2, spare_nodes=1,
+                         env=_env(CRAFT_COMM_RECOVERY_POLICY=policy))
+        out = world.run(self._resilient_loop(world, policy), timeout=120)
+        want = 3 if policy == "SHRINKING" else 4
+        assert {v[1] for v in out.values()} == {want}
+        assert any(v[0] == "recovered" for v in out.values())
+
+    def test_recovery_stats_phases(self):
+        """Paper Table 3's five phases are all reported."""
+        world = SimWorld(4, spare_nodes=1, env=_env())
+        out = world.run(self._resilient_loop(world, "NON-SHRINKING"),
+                        timeout=120)
+        stats = next(v[2] for v in out.values() if v[0] == "recovered")
+        for phase in ("revoke_shrink_s", "spawn_info_s", "spawn_merge_s",
+                      "redistribute_s", "resource_mgmt_s"):
+            assert phase in stats, stats
+        assert stats.get("failed") == [3]
+
+
+class TestAftZone:
+    def test_body_reruns_until_success(self):
+        world = SimWorld(3, spare_nodes=1, env=_env())
+        attempts = {}
+
+        def body_factory(world):
+            def fn(c):
+                def body(comm):
+                    attempts.setdefault(comm.rank, 0)
+                    attempts[comm.rank] += 1
+                    if comm.epoch == 0 and comm.rank == 0 \
+                            and attempts[0] == 1:
+                        world.kill(1)
+                    for _ in range(30):
+                        comm.barrier()
+                        time.sleep(0.002)
+                    return ("done", comm.size)
+
+                return aft_zone(c, body, env=_env())
+            return fn
+
+        out = world.run(body_factory(world), timeout=120)
+        assert all(v == ("done", 3) for v in out.values())
+        # at least one member retried
+        assert max(attempts.values()) >= 2
+
+    def test_zone_gives_up_after_max_recoveries(self):
+        world = SimWorld(2, env=_env())
+
+        def fn(c):
+            def body(comm):
+                raise ProcFailedError("synthetic", failed=[0])
+
+            try:
+                aft_zone(c, body, max_recoveries=2, env=_env(
+                    CRAFT_COMM_RECOVERY_POLICY="SHRINKING"))
+            except (AftAbortedError, ProcFailedError, RevokedError):
+                return "aborted"
+            return "unexpected"
+
+        out = world.run(fn, timeout=60)
+        assert "aborted" in set(out.values())
+
+    def test_shrinking_zone_result(self):
+        world = SimWorld(4, env=_env(CRAFT_COMM_RECOVERY_POLICY="SHRINKING"))
+
+        def fn(c):
+            def body(comm):
+                if comm.epoch == 0:
+                    if comm.rank == 0:
+                        world.kill(3)
+                    for _ in range(100):
+                        comm.barrier()
+                        time.sleep(0.002)
+                return comm.size
+
+            return aft_zone(c, body, env=_env(
+                CRAFT_COMM_RECOVERY_POLICY="SHRINKING"))
+
+        out = world.run(fn, timeout=120)
+        assert set(out.values()) == {3}

@@ -1,0 +1,175 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Box, Checkpoint
+from repro.core.env import CraftEnv
+from repro.kernels.xor_parity import ops as xor_ops
+from repro.train.steps import chunked_cross_entropy, cross_entropy
+
+_SETTINGS = settings(
+    max_examples=25, deadline=None,
+    suppress_health_check=[HealthCheck.function_scoped_fixture])
+
+
+# ------------------------------------------------------- checkpoint roundtrip
+@_SETTINGS
+@given(
+    arr=hnp.arrays(
+        dtype=st.sampled_from([np.float32, np.float64, np.int32, np.int64,
+                               np.uint8, np.bool_]),
+        shape=hnp.array_shapes(min_dims=1, max_dims=4, max_side=8),
+        elements=st.nothing() | st.just(0),
+    ).flatmap(lambda a: st.just(a)),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_ndarray_roundtrip_any_dtype(tmp_path_factory, arr, seed):
+    rng = np.random.default_rng(seed)
+    if arr.dtype == np.bool_:
+        arr = rng.integers(0, 2, arr.shape).astype(np.bool_)
+    elif np.issubdtype(arr.dtype, np.integer):
+        arr = rng.integers(0, 100, arr.shape).astype(arr.dtype)
+    else:
+        arr = rng.standard_normal(arr.shape).astype(arr.dtype)
+    tmp = tmp_path_factory.mktemp("rt")
+    env = CraftEnv.capture({
+        "CRAFT_CP_PATH": str(tmp), "CRAFT_USE_SCR": "0"})
+    cp = Checkpoint("p", env=env)
+    live = arr.copy()
+    cp.add("a", live)
+    cp.commit()
+    cp.update_and_write()
+    blank = np.zeros_like(arr)
+    cp2 = Checkpoint("p", env=env)
+    cp2.add("a", blank)
+    cp2.commit()
+    assert cp2.restart_if_needed()
+    np.testing.assert_array_equal(blank, arr)
+
+
+@_SETTINGS
+@given(
+    leaves=st.lists(
+        st.tuples(
+            st.sampled_from(["f32", "i32", "bf16"]),
+            hnp.array_shapes(min_dims=0, max_dims=3, max_side=6)),
+        min_size=1, max_size=5),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_pytree_roundtrip(tmp_path_factory, leaves, seed):
+    rng = np.random.default_rng(seed)
+    dt = {"f32": jnp.float32, "i32": jnp.int32, "bf16": jnp.bfloat16}
+    tree = {
+        f"k{i}": jnp.asarray(rng.standard_normal(shape) * 3, dt[kind])
+        for i, (kind, shape) in enumerate(leaves)
+    }
+    tmp = tmp_path_factory.mktemp("pt")
+    env = CraftEnv.capture({
+        "CRAFT_CP_PATH": str(tmp), "CRAFT_USE_SCR": "0"})
+    box = Box(tree)
+    cp = Checkpoint("t", env=env)
+    cp.add("t", box)
+    cp.commit()
+    cp.update_and_write()
+    blank = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    box2 = Box(blank)
+    cp2 = Checkpoint("t", env=env)
+    cp2.add("t", box2)
+    cp2.commit()
+    assert cp2.restart_if_needed()
+    for k in tree:
+        np.testing.assert_array_equal(
+            np.asarray(box2.value[k], np.float32),
+            np.asarray(tree[k], np.float32))
+
+
+# ------------------------------------------------------------- xor parity
+@_SETTINGS
+@given(
+    sizes=st.lists(st.integers(1, 700), min_size=2, max_size=9),
+    lost=st.integers(0, 100),
+    seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_xor_reconstruct_any_member(sizes, lost, seed):
+    rng = np.random.default_rng(seed)
+    bufs = [rng.bytes(n) for n in sizes]
+    lost = lost % len(bufs)
+    parity = xor_ops.parity_of_buffers(bufs)
+    survivors = [b for i, b in enumerate(bufs) if i != lost]
+    assert xor_ops.reconstruct_member(
+        parity, survivors, len(bufs[lost])) == bufs[lost]
+
+
+# ------------------------------------------------------------ chunked CE
+@_SETTINGS
+@given(
+    b=st.integers(1, 3), l=st.integers(1, 33), v=st.integers(2, 40),
+    chunk=st.integers(1, 40), seed=st.integers(0, 2 ** 31 - 1),
+)
+def test_chunked_ce_equals_full_ce(b, l, v, chunk, seed):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.standard_normal((b, l, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, l)), jnp.int32)
+    full = cross_entropy(jnp.einsum("bld,dv->blv", h, w), labels)
+    ck = chunked_cross_entropy(
+        h, labels, lambda hc: jnp.einsum("bld,dv->blv", hc, w), chunk)
+    np.testing.assert_allclose(float(full), float(ck), rtol=1e-5)
+
+
+# ------------------------------------------------------------ data pipeline
+@_SETTINGS
+@given(step=st.integers(0, 10_000), seed=st.integers(0, 1000))
+def test_data_pipeline_deterministic(step, seed):
+    from repro.data.pipeline import SyntheticTokens
+
+    ds = SyntheticTokens(vocab=128, seq_len=16, global_batch=4, seed=seed)
+    b1 = ds.batch(step)
+    b2 = ds.batch(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 128
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+# --------------------------------------------------------- version counters
+@_SETTINGS
+@given(freqs=st.lists(st.integers(1, 7), min_size=1, max_size=20))
+def test_version_monotonic_under_any_freq_pattern(tmp_path_factory, freqs):
+    tmp = tmp_path_factory.mktemp("vm")
+    env = CraftEnv.capture({
+        "CRAFT_CP_PATH": str(tmp), "CRAFT_USE_SCR": "0"})
+    b = Box(0)
+    cp = Checkpoint("m", env=env)
+    cp.add("x", b)
+    cp.commit()
+    prev = 0
+    for i, f in enumerate(freqs, start=1):
+        cp.update_and_write(i, f)
+        assert cp.version >= prev
+        prev = cp.version
+    assert cp._pfs.latest_version() == cp.version
+
+
+# ------------------------------------------------------------- adamw
+@_SETTINGS
+@given(bits=st.sampled_from([32, 8]), seed=st.integers(0, 2 ** 31 - 1))
+def test_adamw_moves_against_gradient(bits, seed):
+    from repro.optim.adamw import OptimConfig, adamw_init, adamw_update
+
+    rng = np.random.default_rng(seed)
+    p = {"w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)}
+    cfg = OptimConfig(lr=1e-2, state_bits=bits, master_fp32=False,
+                      warmup_steps=0, weight_decay=0.0)
+    st_ = adamw_init(p, cfg)
+    g = {"w": jnp.ones((4, 8), jnp.float32)}
+    p2, st2, _ = adamw_update(g, st_, p, cfg)
+    # positive gradient → parameters must decrease
+    assert float(jnp.mean(p2["w"] - p["w"])) < 0
+    assert int(st2["count"]) == 1
