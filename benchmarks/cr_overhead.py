@@ -16,10 +16,14 @@ import os
 
 import shutil
 import tempfile
+import time
 from pathlib import Path
+
+import numpy as np
 
 from benchmarks.common import emit
 from repro.apps.lanczos import GrapheneConfig, run_lanczos
+from repro.core import Checkpoint
 from repro.core.env import CraftEnv
 
 
@@ -51,7 +55,65 @@ def _run(mode: str, base: Path, cfg, n_iter, cp_freq, extra_work_s):
     return res
 
 
+def _codec_write(base: Path, label: str, arrays, versions: int, envmap) -> float:
+    """Write ``versions`` checkpoint versions; return best per-version seconds."""
+    env = CraftEnv.capture({
+        "CRAFT_CP_PATH": str(base / label),
+        "CRAFT_USE_SCR": "0",
+        "CRAFT_KEEP_VERSIONS": "2",
+        **envmap,
+    })
+    cp = Checkpoint(f"codec_{label}", env=env)
+    for k, a in arrays.items():
+        cp.add(k, a)
+    cp.commit()
+    best = float("inf")
+    try:
+        for _ in range(versions):
+            t0 = time.perf_counter()
+            cp.update_and_write()
+            cp.wait()
+            best = min(best, time.perf_counter() - t0)
+    finally:
+        cp.close()
+    return best
+
+
+def codec_throughput(full: bool = False) -> None:
+    """Chunked+parallel (codec v1, worker pool) vs legacy single-thread (v0).
+
+    Same multi-array checkpoint, same host, same tier — the measured delta is
+    purely the write-path refactor: chunked encode fanout + parallel per-array
+    flush vs one monolithic ``tobytes``+crc32 blob at a time on one thread.
+    """
+    rng = np.random.default_rng(0)
+    n_arrays = 8
+    mb = 16 if full else 8
+    arrays = {
+        f"a{i}": rng.standard_normal((mb * 1024 * 1024 // 4,)).astype(np.float32)
+        for i in range(n_arrays)
+    }
+    total_mb = n_arrays * mb
+    versions = 4 if full else 3
+    base = Path(tempfile.mkdtemp(prefix="craft-codec-"))
+    try:
+        legacy_s = _codec_write(
+            base, "legacy", arrays, versions,
+            {"CRAFT_CODEC_VERSION": "0", "CRAFT_IO_WORKERS": "1"})
+        chunked_s = _codec_write(
+            base, "chunked", arrays, versions, {"CRAFT_CODEC_VERSION": "1"})
+        emit("codec_throughput", "legacy_write", round(total_mb / legacy_s, 1),
+             "MB/s", codec="v0", workers=1)
+        emit("codec_throughput", "chunked_write", round(total_mb / chunked_s, 1),
+             "MB/s", codec="v1",
+             workers=CraftEnv.capture({}).io_workers)
+        emit("codec_throughput", "speedup", round(legacy_s / chunked_s, 2), "x")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
 def main(full: bool = False) -> None:
+    codec_throughput(full)
     # checkpoint payload = 2 Lanczos vectors (nx·ny·2 fp32) ≈ 17 MB at 1024²
     # — big enough that write time is visible against ~ms-scale iterations
     cfg = GrapheneConfig(nx=1024 if full else 768,

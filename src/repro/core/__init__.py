@@ -7,6 +7,7 @@ Public surface:
     aft_zone, AftZone         — AFT_BEGIN/AFT_END analog (paper §3)
     FTComm + backends         — ULFM-semantics communicator
     CraftEnv                  — paper Table 2 environment variables
+    StorageTier               — storage backend interface (tiers & codec)
 """
 from repro.core.aft import AftAbortedError, AftZone, aft_zone
 from repro.core.checkpoint import Checkpoint
@@ -18,11 +19,12 @@ from repro.core.comm import (
 )
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
 from repro.core.env import CraftEnv
+from repro.core.tiers import StorageTier
 
 __all__ = [
     "AftAbortedError", "AftZone", "aft_zone",
     "Checkpoint", "Box", "FuncCp", "JaxArrayCp", "NdArrayCp", "PodCp",
     "PytreeCp", "register_adapter",
     "CommError", "FTComm", "NullComm", "ProcFailedError", "RevokedError",
-    "CheckpointError", "CpBase", "IOContext", "CraftEnv",
+    "CheckpointError", "CpBase", "IOContext", "CraftEnv", "StorageTier",
 ]

@@ -1,4 +1,4 @@
-"""Asynchronous checkpoint writing (paper §2.4).
+"""Asynchronous checkpoint writing (paper §2.4) — sequencer + worker pool.
 
 The paper dedicates one writer thread per process (``std::async``) with two
 modes:
@@ -10,43 +10,89 @@ modes:
   thread serializes the *live* data, and the application must call
   ``Checkpoint.wait()`` before mutating it.
 
-``CRAFT_ASYNC_THREAD_PIN_CPULIST`` pins the writer thread (paper: maximize
+Beyond the paper, the writer is now a two-lane construct:
+
+* the **sequencer** — a single dedicated thread executing ``submit()`` jobs
+  strictly in submission order.  ``Checkpoint`` submits one job per version,
+  so version K is always fully published before K+1 starts (ordering per
+  checkpoint version is a durability invariant: ``meta.json`` must never
+  point at a version newer than the directories on disk).
+* a **bounded worker pool** of ``workers`` threads serving
+  :meth:`run_parallel` — independent jobs (per-array file writes, per-chunk
+  encodes) fan out across it.  The *calling* thread always participates in
+  draining its own job list, so ``run_parallel`` never deadlocks even when
+  every pool worker is busy or the pool is saturated, and nested fanout
+  (arrays → chunks) degrades gracefully to inline execution.
+
+``CRAFT_ASYNC_THREAD_PIN_CPULIST`` pins all writer threads (paper: maximize
 async gain by keeping the writer off the compute cores).  On Linux we honor it
-via ``os.sched_setaffinity`` on the writer thread's TID; elsewhere it is a
-documented no-op.
+via ``os.sched_setaffinity``; elsewhere it is a documented no-op.
 """
 from __future__ import annotations
 
 import os
 import threading
 import queue
-from typing import Callable, Optional, Sequence
+from collections import deque
+from typing import Callable, List, Optional, Sequence
 
 
 class AsyncWriter:
-    """A dedicated writer thread executing checkpoint jobs in order."""
+    """Ordered writer lane + bounded worker pool for checkpoint IO jobs."""
 
-    def __init__(self, pin_cpulist: Sequence[int] = (), name: str = "craft-writer"):
-        self._queue: "queue.Queue" = queue.Queue()
+    def __init__(
+        self,
+        workers: int = 1,
+        pin_cpulist: Sequence[int] = (),
+        name: str = "craft-writer",
+    ):
+        self.workers = max(1, int(workers))
+        self._name = name
         self._pin = tuple(pin_cpulist)
         self._error: Optional[BaseException] = None
         self._pending = 0
         self._cv = threading.Condition()
-        self._thread = threading.Thread(target=self._loop, name=name, daemon=True)
-        self._started = False
+        # ordered lane (sequencer)
+        self._queue: "queue.Queue" = queue.Queue()
+        self._seq_thread = threading.Thread(
+            target=self._seq_loop, name=name, daemon=True
+        )
+        self._seq_started = False
+        # worker pool (fanout lane); bounded so a burst of fanouts cannot
+        # enqueue unbounded helper entries
+        self._pool_queue: "queue.Queue" = queue.Queue(maxsize=4 * self.workers)
+        self._pool_threads: List[threading.Thread] = []
+        self._pool_lock = threading.Lock()
+        self._closed = False
 
     # -- lifecycle -----------------------------------------------------------
-    def _ensure_started(self) -> None:
-        if not self._started:
-            self._thread.start()
-            self._started = True
-
-    def _loop(self) -> None:
+    def _apply_pin(self) -> None:
         if self._pin and hasattr(os, "sched_setaffinity"):
             try:
                 os.sched_setaffinity(0, set(self._pin))
             except OSError:
                 pass  # CPU list not available on this host — documented no-op
+
+    def _ensure_seq_started(self) -> None:
+        if not self._seq_started:
+            self._seq_thread.start()
+            self._seq_started = True
+
+    def _ensure_pool_started(self) -> None:
+        with self._pool_lock:
+            if self._closed or self._pool_threads:
+                return
+            for i in range(self.workers):
+                t = threading.Thread(
+                    target=self._pool_loop,
+                    name=f"{self._name}-pool-{i}",
+                    daemon=True,
+                )
+                t.start()
+                self._pool_threads.append(t)
+
+    def _seq_loop(self) -> None:
+        self._apply_pin()
         while True:
             job = self._queue.get()
             if job is None:
@@ -61,10 +107,19 @@ class AsyncWriter:
                     self._pending -= 1
                     self._cv.notify_all()
 
-    # -- API -------------------------------------------------------------------
+    def _pool_loop(self) -> None:
+        self._apply_pin()
+        while True:
+            task = self._pool_queue.get()
+            if task is None:
+                return
+            task()  # drain-helpers never raise (errors collected per group)
+
+    # -- ordered lane ----------------------------------------------------------
     def submit(self, job: Callable[[], None]) -> None:
+        """Enqueue a job on the ordered lane (strict submission order)."""
         self._raise_pending_error()
-        self._ensure_started()
+        self._ensure_seq_started()
         with self._cv:
             self._pending += 1
         self._queue.put(job)
@@ -76,12 +131,78 @@ class AsyncWriter:
                 self._cv.wait()
         self._raise_pending_error()
 
+    # -- fanout lane -----------------------------------------------------------
+    def run_parallel(self, jobs: Sequence[Callable[[], object]]) -> list:
+        """Run independent jobs across the pool; return results in order.
+
+        The calling thread participates in draining the job list, pool
+        workers help as capacity allows; the first raised exception cancels
+        all not-yet-started jobs and is re-raised after in-flight jobs drain.
+        """
+        jobs = list(jobs)
+        if not jobs:
+            return []
+        if len(jobs) == 1 or self.workers == 1:
+            return [job() for job in jobs]
+        self._ensure_pool_started()
+        results: list = [None] * len(jobs)
+        errors: List[BaseException] = []
+        pending = deque(enumerate(jobs))
+        lock = threading.Lock()
+        done = threading.Event()
+        remaining = [len(jobs)]
+
+        def drain() -> None:
+            while True:
+                with lock:
+                    if errors and pending:  # cancel unstarted work
+                        remaining[0] -= len(pending)
+                        pending.clear()
+                        if remaining[0] == 0:
+                            done.set()
+                    if not pending:
+                        return
+                    i, job = pending.popleft()
+                try:
+                    r = job()
+                except BaseException as exc:
+                    with lock:
+                        errors.append(exc)
+                        remaining[0] -= 1
+                        if remaining[0] == 0:
+                            done.set()
+                else:
+                    with lock:
+                        results[i] = r
+                        remaining[0] -= 1
+                        if remaining[0] == 0:
+                            done.set()
+
+        for _ in range(min(self.workers, len(jobs) - 1)):
+            try:
+                self._pool_queue.put_nowait(drain)
+            except queue.Full:
+                break  # pool saturated — caller (and busy workers) drain it
+        drain()      # caller participates; returns when no job is unclaimed
+        done.wait()  # helpers may still be finishing their last job
+        if errors:
+            raise errors[0]
+        return results
+
+    # -- teardown --------------------------------------------------------------
     def close(self) -> None:
-        if self._started:
+        if self._seq_started:
             self.wait()
             self._queue.put(None)
-            self._thread.join(timeout=30)
-            self._started = False
+            self._seq_thread.join(timeout=30)
+            self._seq_started = False
+        with self._pool_lock:
+            self._closed = True
+            threads, self._pool_threads = self._pool_threads, []
+        for _ in threads:
+            self._pool_queue.put(None)
+        for t in threads:
+            t.join(timeout=30)
 
     @property
     def busy(self) -> bool:

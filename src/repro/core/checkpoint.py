@@ -113,8 +113,15 @@ class Checkpoint:
                 comm=self.comm,
                 env=self.env,
             )
-        if self.env.write_async or self.env.write_async_zero_copy:
+        if (
+            self.env.write_async
+            or self.env.write_async_zero_copy
+            or self.env.io_workers > 1
+        ):
+            # The ordered lane serializes versions (async modes); the worker
+            # pool fans out per-array/per-chunk IO — also used in sync mode.
             self._writer = AsyncWriter(
+                workers=self.env.io_workers,
                 pin_cpulist=self.env.async_thread_pin_cpulist,
                 name=f"craft-writer-{self.name}",
             )
@@ -152,15 +159,17 @@ class Checkpoint:
             return False
         version = self._version + 1
 
-        if self._writer is not None and self.env.write_async_zero_copy:
+        if self.env.write_async_zero_copy:
             # zero-copy: snapshot *and* IO on the writer thread; the caller
             # must wait() before mutating live data (paper §2.4).
             self._writer.submit(lambda v=version: self._snapshot_and_write(v))
-        elif self._writer is not None:
+        elif self.env.write_async:
             # copy-based: snapshot inline (cheap D2H), IO on writer thread.
             self._update_all()
             self._writer.submit(lambda v=version: self._write_version(v))
         else:
+            # synchronous: IO inline — the writer (if any) only serves
+            # run_parallel fanout of per-array/per-chunk jobs.
             self._update_all()
             self._write_version(version)
         self._version = version
@@ -204,12 +213,31 @@ class Checkpoint:
                 compress=self.env.compress,
                 checksum=self.env.checksum,
                 checksum_db=checksums,
+                rel_root=staged,
+                codec_version=self.env.codec_version,
+                chunk_bytes=self.env.chunk_bytes,
+                fanout=self._writer.run_parallel if self._writer else None,
             )
+            # Independent checkpointables flush in parallel across the IO
+            # pool; publish() below is the barrier that preserves per-version
+            # ordering (a version is only promoted once every file landed).
+            jobs = []
             for key, item in self._map.items():
                 sub = staged / key
                 sub.mkdir(parents=True, exist_ok=True)
-                item.write(sub, ctx)
-            store.publish(staged, version, extra_meta={"keys": sorted(self._map)})
+                jobs.append(lambda item=item, sub=sub: item.write(sub, ctx))
+            storage.run_jobs(jobs, ctx)
+            store.publish(
+                staged,
+                version,
+                extra_meta={
+                    "keys": sorted(self._map),
+                    "codec": self.env.codec_version,
+                    # rank 0's view of the per-file digest manifest; restore
+                    # checks these files exist before reading the version
+                    "checksums": checksums,
+                },
+            )
         except BaseException:
             store.abort(staged)
             raise
@@ -256,6 +284,9 @@ class Checkpoint:
             proc_count=self.comm.size,
             compress=self.env.compress,
             checksum=self.env.checksum,
+            codec_version=self.env.codec_version,
+            chunk_bytes=self.env.chunk_bytes,
+            fanout=self._writer.run_parallel if self._writer else None,
         )
         errors = []
         for store, label in ((self._node, "node"), (self._pfs, "pfs")):
@@ -273,15 +304,44 @@ class Checkpoint:
             if vdir is None or not Path(vdir).is_dir():
                 errors.append(f"{label}: version v-{version} not present")
                 continue
+            missing = self._manifest_missing(store, Path(vdir), version)
+            if missing:
+                errors.append(
+                    f"{label}: v-{version} incomplete, missing {missing[:3]}"
+                )
+                continue
             try:
-                for key, item in self._map.items():
-                    item.read(Path(vdir) / key, ctx)
+                # independent items restore in parallel (chunk digest checks
+                # and decompression fan out across the same pool underneath)
+                storage.run_jobs(
+                    [
+                        lambda key=key, item=item: item.read(Path(vdir) / key, ctx)
+                        for key, item in self._map.items()
+                    ],
+                    ctx,
+                )
                 return
             except CheckpointError as exc:
                 errors.append(f"{label}: {exc}")
         raise CheckpointError(
             f"could not restore {self.name!r} v-{version}: " + "; ".join(errors)
         )
+
+    @staticmethod
+    def _manifest_missing(store, vdir: Path, version: int) -> list:
+        """Manifest files absent from ``vdir`` (the metadata's file-set check).
+
+        The stored checksum manifest describes the *latest* published version
+        only, so older versions (and stores without metadata) skip the check;
+        per-file payload integrity is still verified by the in-file digests.
+        """
+        meta = store.meta() if hasattr(store, "meta") else {}
+        if meta.get("latest") != version:
+            return []
+        return [
+            rel for rel in meta.get("checksums", {})
+            if not (vdir / rel).exists()
+        ]
 
     # ----------------------------------------------------------------- misc
     @property

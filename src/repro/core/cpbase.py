@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import threading
 from pathlib import Path
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 
 @dataclasses.dataclass
@@ -25,20 +26,42 @@ class IOContext:
     ``proc_rank`` / ``proc_count`` identify the writing process (paper: rank
     embedded in process-local file names); ``compress``/``checksum`` select the
     codec, and ``checksum_db`` collects per-file digests for the manifest.
+
+    Codec pipeline fields (on-disk format v1): ``codec_version`` picks the
+    array file format (0 = legacy monolithic blob, 1 = chunked), and
+    ``chunk_bytes`` the chunk granularity.  ``fanout``, when set, is a
+    ``fanout(jobs) -> results`` callable backed by the IO worker pool; the
+    storage layer routes independent per-array and per-chunk work through it,
+    so reads/writes issued from several threads share one ``IOContext`` —
+    hence the lock around ``checksum_db`` updates.
     """
 
     proc_rank: int = 0
     proc_count: int = 1
     compress: str = "none"          # none | zstd
-    checksum: str = "crc32"         # crc32 | none
-    checksum_db: Optional[dict] = None   # filled at write, verified at read
+    checksum: str = "crc32"         # crc32 | fletcher | none
+    # Per-file digest manifest: filled at write (keyed by path relative to
+    # ``rel_root``), persisted into the version metadata at publish; restore
+    # checks every manifest file is present before reading (payload integrity
+    # itself is verified by the in-file digests).
+    checksum_db: Optional[dict] = None
+    rel_root: Optional[Path] = None      # staging root the manifest keys on
+    codec_version: int = 1          # 0 = legacy blob, 1 = chunked
+    chunk_bytes: int = 4 * 1024 * 1024
+    # Parallel fanout hook: fanout(list[callable]) -> list of results, in
+    # order.  None means "run inline" (no pool available).
+    fanout: Optional[Callable[[Sequence[Callable]], list]] = None
     # Restore-time hook: maps a stored global numpy array onto the live
     # sharding/topology (elastic restore).  Installed by jax-aware types.
     device_put: Optional[Callable] = None
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     def record_checksum(self, rel_name: str, digest: int) -> None:
         if self.checksum_db is not None:
-            self.checksum_db[rel_name] = digest
+            with self._lock:
+                self.checksum_db[rel_name] = digest
 
 
 class CpBase(abc.ABC):

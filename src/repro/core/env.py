@@ -52,7 +52,12 @@ class CraftEnv:
                                      # lands on the PFS tier (default: 1)
     keep_versions: int               # CRAFT_KEEP_VERSIONS (default: 2)
     compress: str                    # CRAFT_COMPRESS: none|zstd (default none)
-    checksum: str                    # CRAFT_CHECKSUM: crc32|none (default crc32)
+    checksum: str                    # CRAFT_CHECKSUM: crc32|fletcher|none
+                                     # (default crc32; v1 files always store
+                                     # the kernel fletcher digest when on)
+    codec_version: int               # CRAFT_CODEC_VERSION: 0 legacy | 1 chunked
+    chunk_bytes: int                 # CRAFT_CHUNK_BYTES (default 4 MiB)
+    io_workers: int                  # CRAFT_IO_WORKERS: writer pool size
 
     @staticmethod
     def capture(environ: Optional[dict] = None) -> "CraftEnv":
@@ -76,8 +81,21 @@ class CraftEnv:
         if compress not in ("none", "zstd"):
             raise ValueError(f"CRAFT_COMPRESS={compress!r}")
         checksum = env.get("CRAFT_CHECKSUM", "crc32").lower()
-        if checksum not in ("crc32", "none"):
+        if checksum not in ("crc32", "fletcher", "none"):
             raise ValueError(f"CRAFT_CHECKSUM={checksum!r}")
+        codec_version = int(env.get("CRAFT_CODEC_VERSION", "1"))
+        if codec_version not in (0, 1):
+            raise ValueError(f"CRAFT_CODEC_VERSION={codec_version!r}")
+        chunk_bytes = int(env.get("CRAFT_CHUNK_BYTES", str(4 * 1024 * 1024)))
+        if chunk_bytes <= 0:
+            raise ValueError(f"CRAFT_CHUNK_BYTES={chunk_bytes!r}")
+        io_workers_raw = env.get("CRAFT_IO_WORKERS")
+        if io_workers_raw is None:
+            io_workers = min(4, os.cpu_count() or 1)
+        else:
+            io_workers = int(io_workers_raw)
+        if io_workers < 1:
+            raise ValueError(f"CRAFT_IO_WORKERS={io_workers!r}")
         return CraftEnv(
             cp_path=Path(env.get("CRAFT_CP_PATH", os.getcwd())),
             enable=_bool(env, "CRAFT_ENABLE", True),
@@ -95,4 +113,7 @@ class CraftEnv:
             keep_versions=int(env.get("CRAFT_KEEP_VERSIONS", "2")),
             compress=compress,
             checksum=checksum,
+            codec_version=codec_version,
+            chunk_bytes=chunk_bytes,
+            io_workers=io_workers,
         )

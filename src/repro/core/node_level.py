@@ -25,6 +25,13 @@ Redundancy policies (``CRAFT_NODE_REDUNDANCY``):
 Restore goes through :meth:`NodeStore.materialize`, which transparently
 rebuilds a missing local version from the partner mirror or the parity group
 before handing the directory to ``Checkpoint``.
+
+``NodeStore`` is a :class:`~repro.core.tiers.StorageTier`: the local store is
+a plain :class:`~repro.core.storage.VersionStore`, and the mirror / parity
+side-trees reuse the same atomic tmp→rename and retention helpers from
+:mod:`repro.core.tiers` instead of re-implementing them.  XOR parity
+manifests additionally record the kernel Fletcher digest of every member's
+payload, so a reconstruction can tell a stale survivor from a valid one.
 """
 from __future__ import annotations
 
@@ -33,8 +40,10 @@ import shutil
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from repro.core import storage
+from repro.core import storage, tiers
 from repro.core.cpbase import CheckpointError
+from repro.core.tiers import StorageTier
+from repro.kernels.checksum import ops as checksum_ops
 from repro.kernels.xor_parity import ops as xor_ops
 
 
@@ -46,8 +55,8 @@ def _node_geometry(comm):
     return nid, n_nodes, leader
 
 
-class NodeStore:
-    """Node tier for one checkpoint name (same staging API as VersionStore)."""
+class NodeStore(StorageTier):
+    """Node tier for one checkpoint name (the redundancy-protected tier)."""
 
     def __init__(self, base: Path, name: str, comm, env):
         self.base = Path(base)
@@ -83,6 +92,10 @@ class NodeStore:
         g0 = self._group(nid)[0]
         return self._node_dir(holder) / f"xor-group-{g0}" / self.name
 
+    def _member_version_dir(self, member: int, version: int) -> Path:
+        """Another node's v-<K> dir — path-only, no mkdir side effects."""
+        return self._node_dir(member) / self.name / tiers.version_dir_name(version)
+
     # -- staging API (Checkpoint._write_to_store) ------------------------------
     def stage(self, version: int) -> Path:
         return self._local.stage(version)
@@ -106,13 +119,11 @@ class NodeStore:
         src = self._local.version_dir(version)
         root = self._mirror_root(self.nid)
         root.mkdir(parents=True, exist_ok=True)
-        tmp = root / f".tmp-v-{version}"
+        tmp = root / tiers.staging_dir_name(version)
         shutil.rmtree(tmp, ignore_errors=True)
         shutil.copytree(src, tmp)
-        final = root / f"v-{version}"
-        shutil.rmtree(final, ignore_errors=True)
-        tmp.replace(final)
-        self._retire_tree(root)
+        tiers.atomic_publish_dir(tmp, root / tiers.version_dir_name(version))
+        tiers.retire_version_dirs(root, self.env.keep_versions)
 
     def _publish_xor(self, version: int) -> None:
         # The parity holder's leader computes the group parity.
@@ -122,10 +133,7 @@ class NodeStore:
         payloads: Dict[int, bytes] = {}
         manifest: Dict[str, dict] = {}
         for member in group:
-            vdir = storage.VersionStore(
-                self._node_dir(member), self.name, keep_versions=10**9,
-                sweep=False,
-            ).version_dir(version)
+            vdir = self._member_version_dir(member, version)
             files = sorted(p for p in vdir.rglob("*") if p.is_file())
             blob = bytearray()
             entries = []
@@ -134,42 +142,41 @@ class NodeStore:
                 entries.append({"rel": str(p.relative_to(vdir)), "size": len(data)})
                 blob += data
             payloads[member] = bytes(blob)
-            manifest[str(member)] = {"files": entries, "size": len(blob)}
+            s1, s2 = checksum_ops.digest_bytes(payloads[member])
+            manifest[str(member)] = {
+                "files": entries,
+                "size": len(blob),
+                "digest": [int(s1), int(s2)],
+            }
         parity = xor_ops.parity_of_buffers([payloads[m] for m in group])
         root = self._parity_root(self.nid, version)
-        pdir = root / f"v-{version}"
-        tmp = root / f".tmp-v-{version}"
+        tmp = root / tiers.staging_dir_name(version)
         shutil.rmtree(tmp, ignore_errors=True)
         tmp.mkdir(parents=True)
         (tmp / "parity.bin").write_bytes(parity)
         storage.write_json(tmp / "manifest.json", manifest)
-        shutil.rmtree(pdir, ignore_errors=True)
-        tmp.replace(pdir)
-        self._retire_tree(root)
-
-    def _retire_tree(self, root: Path) -> None:
-        vdirs = sorted(
-            (int(p.name[2:]), p) for p in root.glob("v-*") if p.is_dir()
-        )
-        for _, p in vdirs[: -max(1, self.env.keep_versions)]:
-            shutil.rmtree(p, ignore_errors=True)
+        tiers.atomic_publish_dir(tmp, root / tiers.version_dir_name(version))
+        tiers.retire_version_dirs(root, self.env.keep_versions)
 
     # -- reading ----------------------------------------------------------------
+    def meta(self) -> dict:
+        """This node's local version metadata (manifest checks at restore)."""
+        return self._local.meta()
+
     def latest_version(self) -> int:
         """Latest version recoverable *for this node* (local or via peers)."""
         best = self._local.latest_version()
         if self.redundancy == "PARTNER" and self.n_nodes > 1:
-            root = self._mirror_root(self.nid)
-            for p in root.glob("v-*"):
-                best = max(best, int(p.name[2:]))
+            for v, _ in tiers.list_version_dirs(self._mirror_root(self.nid)):
+                best = max(best, v)
         elif self.redundancy == "XOR":
             # any version whose parity manifest exists is recoverable
             for holder in self._group(self.nid):
                 g0 = self._group(self.nid)[0]
                 root = self._node_dir(holder) / f"xor-group-{g0}" / self.name
-                for p in root.glob("v-*"):
+                for v, p in tiers.list_version_dirs(root):
                     if (p / "manifest.json").exists():
-                        best = max(best, int(p.name[2:]))
+                        best = max(best, v)
         return best
 
     def version_dir(self, version: int) -> Path:
@@ -195,7 +202,7 @@ class NodeStore:
         return vdir.is_dir() and any(vdir.iterdir())
 
     def _recover_partner(self, version: int) -> Optional[Path]:
-        src = self._mirror_root(self.nid) / f"v-{version}"
+        src = self._mirror_root(self.nid) / tiers.version_dir_name(version)
         if not src.is_dir():
             return None
         dst = self._local.version_dir(version)
@@ -205,7 +212,7 @@ class NodeStore:
 
     def _recover_xor(self, version: int) -> Optional[Path]:
         root = self._parity_root(self.nid, version)
-        pdir = root / f"v-{version}"
+        pdir = root / tiers.version_dir_name(version)
         if not (pdir / "manifest.json").exists():
             return None
         manifest = storage.read_json(pdir / "manifest.json")
@@ -217,17 +224,22 @@ class NodeStore:
         for member in group:
             if member == self.nid:
                 continue
-            vdir = storage.VersionStore(
-                self._node_dir(member), self.name, keep_versions=10**9,
-                sweep=False,
-            ).version_dir(version)
+            vdir = self._member_version_dir(member, version)
             blob = bytearray()
             for ent in manifest[str(member)]["files"]:
                 blob += (vdir / ent["rel"]).read_bytes()
-            if len(blob) != manifest[str(member)]["size"]:
+            ment = manifest[str(member)]
+            if len(blob) != ment["size"]:
                 raise CheckpointError(
                     f"survivor node {member} payload size mismatch"
                 )
+            if "digest" in ment:
+                s1, s2 = checksum_ops.digest_bytes(bytes(blob))
+                if [int(s1), int(s2)] != list(ment["digest"]):
+                    raise CheckpointError(
+                        f"survivor node {member} payload digest mismatch "
+                        "(stale or corrupt survivor data)"
+                    )
             survivors.append(bytes(blob))
         parity = (pdir / "parity.bin").read_bytes()
         mine = xor_ops.reconstruct_member(parity, survivors, my_entry["size"])

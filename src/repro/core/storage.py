@@ -1,4 +1,4 @@
-"""Versioned, atomic checkpoint storage (paper §2.6).
+"""Versioned, atomic checkpoint storage (paper §2.6) + the array codec.
 
 Directory layout (paper Fig. 4):
 
@@ -7,11 +7,32 @@ Directory layout (paper Fig. 4):
         v-<K>/               -- one directory per checkpoint version
             <key>/...        -- one subdirectory per checkpointable object
 
-Atomicity protocol: a version is staged in ``.tmp-v-<K>-<nonce>/``, every file
-is fsync'd, the directory is atomically renamed to ``v-<K>``, and only then is
+Atomicity protocol: a version is staged in ``.tmp-v-<K>/``, every file is
+fsync'd, the directory is atomically renamed to ``v-<K>``, and only then is
 ``meta.json`` updated (itself via tmp+rename).  A crash at any point leaves
 either the previous complete version or a garbage ``.tmp-*`` dir that is swept
-on the next run — never a torn checkpoint.
+on the next run — never a torn checkpoint.  The shared directory mechanics
+live in :mod:`repro.core.tiers`; :class:`VersionStore` is the concrete
+:class:`~repro.core.tiers.StorageTier` used for the PFS path and as the local
+store of the node tier.
+
+On-disk array format (one ``.bin`` file per array / shard)
+----------------------------------------------------------
+
+Every file starts ``CRFT`` + u64(header_len) + JSON header.  The header's
+``fmt`` field selects the codec:
+
+* **v0 (legacy, fmt absent)** — monolithic: u64 crc32 digest, then the whole
+  payload (optionally zstd-compressed) as one blob.  Still readable; written
+  only when ``IOContext.codec_version == 0``.
+* **v1 (chunked, fmt=1)** — the payload is split into fixed-size chunks
+  (default 4 MiB, ``CRAFT_CHUNK_BYTES``).  Each chunk is independently
+  compressed (zstd, when available and enabled) and digested with the blocked
+  Fletcher checksum from ``repro.kernels.checksum`` — Pallas on TPU, the
+  jitted reference on CPU — instead of host zlib.  The header records per
+  chunk ``{clen, ulen, digest}`` so a reader can verify integrity chunk by
+  chunk and reject truncated files explicitly.  Chunk *encoding* fans out
+  across the IO worker pool via ``IOContext.fanout``.
 """
 from __future__ import annotations
 
@@ -21,7 +42,7 @@ import shutil
 import uuid
 import zlib
 from pathlib import Path
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -30,9 +51,14 @@ try:  # optional transparent compression (beyond-paper extension)
 except ImportError:  # pragma: no cover
     _zstd = None
 
+from repro.core import tiers
 from repro.core.cpbase import CheckpointError, IOContext
+from repro.core.tiers import StorageTier, fsync_dir  # re-export (legacy API)
 
 _MAGIC = b"CRFT"
+CODEC_V0 = 0
+CODEC_V1 = 1
+DEFAULT_CHUNK_BYTES = 4 * 1024 * 1024
 
 
 def _dtype_to_name(dt: np.dtype) -> str:
@@ -48,11 +74,53 @@ def _dtype_from_name(name: str) -> np.dtype:
         return np.dtype(getattr(ml_dtypes, name))
 
 
+def _digest_chunk(data) -> List[int]:
+    """Blocked Fletcher digest [s1, s2] via the checksum kernel ops."""
+    from repro.kernels.checksum import ops as checksum_ops
+
+    s1, s2 = checksum_ops.digest_bytes(data)
+    return [int(s1), int(s2)]
+
+
+def _as_byte_view(arr: np.ndarray) -> np.ndarray:
+    """Contiguous flat uint8 view of an array (copy only if non-contiguous)."""
+    arr = np.ascontiguousarray(arr)
+    if arr.nbytes == 0:
+        return np.empty(0, dtype=np.uint8)
+    return arr.reshape(-1).view(np.uint8).reshape(-1)
+
+
+def _manifest_name(path: Path, ctx: IOContext) -> str:
+    """Checksum-manifest key: path relative to the staging root (collision-
+    free across checkpoint keys), falling back to the bare file name."""
+    if ctx.rel_root is not None:
+        try:
+            return str(path.relative_to(ctx.rel_root))
+        except ValueError:
+            pass
+    return path.name
+
+
+def run_jobs(jobs, ctx: IOContext) -> list:
+    """Run independent IO jobs through ``ctx.fanout`` when available, else
+    inline — the single dispatch point for per-array and per-chunk fanout."""
+    if ctx.fanout is not None and len(jobs) > 1:
+        return ctx.fanout(jobs)
+    return [job() for job in jobs]
+
+
 # --------------------------------------------------------------------------
-# low-level file codec: length-prefixed numpy buffers with optional zstd +
-# crc32, fsync'd.  One .bin file per array keeps node-tier writes parallel.
+# array codec — v1 chunked writer, v0 legacy writer, version-dispatching reader
 # --------------------------------------------------------------------------
 def write_array(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
+    """Serialize ``arr`` to ``path`` using the codec ``ctx`` selects."""
+    if ctx.codec_version == CODEC_V0:
+        _write_array_v0(path, arr, ctx)
+    else:
+        _write_array_v1(path, arr, ctx)
+
+
+def _write_array_v0(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
     arr = np.ascontiguousarray(arr)
     payload = arr.tobytes()
     if ctx.compress == "zstd":
@@ -66,7 +134,7 @@ def write_array(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
             "compress": ctx.compress,
         }
     ).encode()
-    digest = zlib.crc32(payload) if ctx.checksum == "crc32" else 0
+    digest = zlib.crc32(payload) if ctx.checksum != "none" else 0
     tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
     with open(tmp, "wb") as fh:
         fh.write(_MAGIC)
@@ -77,27 +145,171 @@ def write_array(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
         fh.flush()
         os.fsync(fh.fileno())
     os.replace(tmp, path)
-    ctx.record_checksum(path.name, digest)
+    ctx.record_checksum(_manifest_name(path, ctx), digest)
+
+
+def _write_array_v1(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
+    shape = list(np.shape(arr))  # before ascontiguousarray 0-d→1-d promotion
+    arr = np.ascontiguousarray(arr)
+    flat = _as_byte_view(arr)
+    chunk_bytes = max(1, int(ctx.chunk_bytes))
+    compress = ctx.compress
+    if compress == "zstd" and _zstd is None:  # pragma: no cover
+        raise CheckpointError("CRAFT_COMPRESS=zstd but zstandard missing")
+    want_digest = ctx.checksum != "none"
+    n = flat.size
+    offsets = range(0, n, chunk_bytes) if n else range(0)
+
+    def encode(off: int):
+        raw = flat[off: off + chunk_bytes]
+        if compress == "zstd":
+            stored = _zstd.ZstdCompressor(level=3).compress(raw.tobytes())
+        else:
+            stored = memoryview(raw)
+        digest = _digest_chunk(stored) if want_digest else [0, 0]
+        return stored, {"clen": len(stored), "ulen": int(raw.size),
+                        "digest": digest}
+
+    encoded = run_jobs([lambda off=off: encode(off) for off in offsets], ctx)
+    chunks_meta = [meta for _, meta in encoded]
+    header = json.dumps(
+        {
+            "fmt": CODEC_V1,
+            "dtype": _dtype_to_name(arr.dtype),
+            "shape": shape,
+            "compress": compress,
+            "checksum": "fletcher" if want_digest else "none",
+            "chunk_bytes": chunk_bytes,
+            "nbytes": int(n),
+            "chunks": chunks_meta,
+        }
+    ).encode()
+    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
+    with open(tmp, "wb") as fh:
+        fh.write(_MAGIC)
+        fh.write(len(header).to_bytes(8, "little"))
+        fh.write(header)
+        for stored, _ in encoded:
+            fh.write(stored)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+    # whole-file digest for the manifest: fold per-chunk digests
+    folded = 0
+    for meta in chunks_meta:
+        folded = zlib.crc32(
+            meta["digest"][0].to_bytes(4, "little")
+            + meta["digest"][1].to_bytes(4, "little"),
+            folded,
+        )
+    ctx.record_checksum(_manifest_name(path, ctx), folded)
 
 
 def read_array(path: Path, ctx: IOContext) -> np.ndarray:
+    """Read an array written by any codec version (v0 legacy or v1 chunked)."""
     if not path.exists():
         raise CheckpointError(f"missing checkpoint file {path}")
     with open(path, "rb") as fh:
         if fh.read(4) != _MAGIC:
             raise CheckpointError(f"bad magic in {path}")
-        hlen = int.from_bytes(fh.read(8), "little")
-        header = json.loads(fh.read(hlen).decode())
-        digest = int.from_bytes(fh.read(8), "little")
-        payload = fh.read()
-    if ctx.checksum == "crc32" and digest and zlib.crc32(payload) != digest:
+        raw_hlen = fh.read(8)
+        if len(raw_hlen) != 8:
+            raise CheckpointError(f"truncated header in {path}")
+        hlen = int.from_bytes(raw_hlen, "little")
+        raw_header = fh.read(hlen)
+        if len(raw_header) != hlen:
+            raise CheckpointError(f"truncated header in {path}")
+        try:
+            header = json.loads(raw_header.decode())
+        except (UnicodeDecodeError, json.JSONDecodeError) as exc:
+            raise CheckpointError(f"corrupt header in {path}: {exc}") from exc
+        fmt = header.get("fmt", CODEC_V0)
+        if fmt == CODEC_V0:
+            return _read_payload_v0(fh, header, path, ctx)
+        if fmt == CODEC_V1:
+            return _read_payload_v1(fh, header, path, ctx)
+        raise CheckpointError(
+            f"{path}: format v{fmt} is newer than this reader understands"
+        )
+
+
+def _restore_shape(payload: bytes, header: dict, path: Path) -> np.ndarray:
+    dtype = _dtype_from_name(header["dtype"])
+    shape = header["shape"]
+    expected = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+    if len(payload) != expected:
+        raise CheckpointError(
+            f"truncated payload in {path}: got {len(payload)} bytes, "
+            f"expected {expected} for {header['dtype']}{tuple(shape)}"
+        )
+    arr = np.frombuffer(bytearray(payload), dtype=dtype)
+    return arr.reshape(shape)
+
+
+def _read_payload_v0(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray:
+    raw_digest = fh.read(8)
+    if len(raw_digest) != 8:
+        raise CheckpointError(f"truncated payload in {path}")
+    digest = int.from_bytes(raw_digest, "little")
+    payload = fh.read()
+    if ctx.checksum != "none" and digest and zlib.crc32(payload) != digest:
         raise CheckpointError(f"checksum mismatch in {path}")
     if header["compress"] == "zstd":
         if _zstd is None:  # pragma: no cover
             raise CheckpointError("file is zstd-compressed but zstandard missing")
-        payload = _zstd.ZstdDecompressor().decompress(payload)
-    arr = np.frombuffer(bytearray(payload), dtype=_dtype_from_name(header["dtype"]))
-    return arr.reshape(header["shape"])
+        try:
+            payload = _zstd.ZstdDecompressor().decompress(payload)
+        except _zstd.ZstdError as exc:
+            raise CheckpointError(f"corrupt zstd payload in {path}: {exc}") from exc
+    return _restore_shape(payload, header, path)
+
+
+def _read_payload_v1(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray:
+    verify = ctx.checksum != "none" and header.get("checksum", "none") != "none"
+    # phase 1: sequential file IO — read every chunk's stored bytes
+    raw_chunks = []
+    for i, meta in enumerate(header["chunks"]):
+        stored = fh.read(meta["clen"])
+        if len(stored) != meta["clen"]:
+            raise CheckpointError(
+                f"truncated payload in {path}: chunk {i} got "
+                f"{len(stored)}/{meta['clen']} bytes"
+            )
+        raw_chunks.append(stored)
+    if fh.read(1):
+        raise CheckpointError(f"trailing bytes after last chunk in {path}")
+
+    # phase 2: digest verification + decompression fan out across the pool
+    def decode(i: int) -> bytes:
+        stored, meta = raw_chunks[i], header["chunks"][i]
+        if verify and _digest_chunk(stored) != list(meta["digest"]):
+            raise CheckpointError(f"checksum mismatch in {path} (chunk {i})")
+        if header["compress"] == "zstd":
+            if _zstd is None:  # pragma: no cover
+                raise CheckpointError(
+                    "file is zstd-compressed but zstandard missing")
+            try:
+                stored = _zstd.ZstdDecompressor().decompress(stored)
+            except _zstd.ZstdError as exc:
+                raise CheckpointError(
+                    f"corrupt zstd chunk {i} in {path}: {exc}"
+                ) from exc
+        if len(stored) != meta["ulen"]:
+            raise CheckpointError(
+                f"corrupt chunk {i} in {path}: inflated to {len(stored)} "
+                f"bytes, expected {meta['ulen']}"
+            )
+        return stored
+
+    parts = run_jobs(
+        [lambda i=i: decode(i) for i in range(len(raw_chunks))], ctx)
+    out = b"".join(parts)
+    if len(out) != header["nbytes"]:
+        raise CheckpointError(
+            f"truncated payload in {path}: got {len(out)} bytes, "
+            f"expected {header['nbytes']}"
+        )
+    return _restore_shape(out, header, path)
 
 
 def write_json(path: Path, obj) -> None:
@@ -114,18 +326,10 @@ def read_json(path: Path):
         return json.load(fh)
 
 
-def fsync_dir(path: Path) -> None:
-    fd = os.open(path, os.O_RDONLY)
-    try:
-        os.fsync(fd)
-    finally:
-        os.close(fd)
-
-
 # --------------------------------------------------------------------------
-# version store
+# version store — the concrete StorageTier over a plain directory tree
 # --------------------------------------------------------------------------
-class VersionStore:
+class VersionStore(StorageTier):
     """One checkpoint name's versioned directory tree on one storage tier.
 
     Multi-process coordination: all processes of ``comm`` share one staging
@@ -144,7 +348,7 @@ class VersionStore:
         self.comm = comm
         self.root.mkdir(parents=True, exist_ok=True)
         if sweep and self._rank() == 0:
-            self._sweep_tmp()
+            tiers.sweep_tmp_dirs(self.root)
 
     def _rank(self) -> int:
         return 0 if self.comm is None else self.comm.rank
@@ -155,18 +359,14 @@ class VersionStore:
 
     # -- staging ------------------------------------------------------------
     def stage(self, version: int) -> Path:
-        tmp = self.root / f".tmp-v-{version}"
+        tmp = self.root / tiers.staging_dir_name(version)
         tmp.mkdir(parents=True, exist_ok=True)
         return tmp
 
     def publish(self, staged: Path, version: int, extra_meta: Optional[dict] = None) -> None:
         self._barrier()  # every process finished writing its files
         if self._rank() == 0:
-            final = self.root / f"v-{version}"
-            if final.exists():  # re-write of same version (e.g. retry)
-                shutil.rmtree(final)
-            os.replace(staged, final)
-            fsync_dir(self.root)
+            tiers.atomic_publish_dir(staged, self.root / tiers.version_dir_name(version))
             meta = self.meta()
             versions = sorted(set(meta.get("versions", [])) | {version})
             meta.update(
@@ -177,7 +377,7 @@ class VersionStore:
                 }
             )
             write_json(self.root / "meta.json", meta)
-            self._retire(versions)
+            self._retire()
         self._barrier()  # version visible to everyone from here on
 
     def abort(self, staged: Path) -> None:
@@ -197,31 +397,25 @@ class VersionStore:
         """Latest *complete* version, 0 if none (paper: CP-version counter)."""
         meta = self.meta()
         for v in sorted(meta.get("versions", []), reverse=True):
-            if (self.root / f"v-{v}").is_dir():
+            if (self.root / tiers.version_dir_name(v)).is_dir():
                 return v
         return 0
 
     def version_dir(self, version: int) -> Path:
-        return self.root / f"v-{version}"
+        return self.root / tiers.version_dir_name(version)
 
     # -- invalidation (nested checkpoints, paper §2.5) -----------------------
     def invalidate_all(self) -> None:
         meta = self.meta()
         for v in meta.get("versions", []):
-            shutil.rmtree(self.root / f"v-{v}", ignore_errors=True)
+            shutil.rmtree(self.root / tiers.version_dir_name(v), ignore_errors=True)
         meta["versions"] = []
         meta["latest"] = 0
         write_json(self.root / "meta.json", meta)
 
     # -- housekeeping --------------------------------------------------------
-    def _retire(self, versions) -> None:
-        for v in versions[: -self.keep_versions]:
-            shutil.rmtree(self.root / f"v-{v}", ignore_errors=True)
-        kept = versions[-self.keep_versions:]
+    def _retire(self) -> None:
+        kept = tiers.retire_version_dirs(self.root, self.keep_versions)
         meta = self.meta()
         meta["versions"] = kept
         write_json(self.root / "meta.json", meta)
-
-    def _sweep_tmp(self) -> None:
-        for junk in self.root.glob(".tmp-*"):
-            shutil.rmtree(junk, ignore_errors=True)

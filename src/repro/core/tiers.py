@@ -1,0 +1,163 @@
+"""StorageTier — the common spine of every checkpoint storage backend.
+
+CRAFT's write path (paper §2.4–§2.6) spans two tiers with very different
+latency/durability trade-offs: the node-local tier (RAM/SSD, redundancy-
+protected, the SCR analog) and the PFS tier (durable parallel file system).
+Historically ``storage.VersionStore`` and ``node_level.NodeStore`` each
+re-implemented the same directory mechanics — stage in ``.tmp-*``, fsync,
+atomic rename to ``v-<K>``, retire old versions, sweep torn staging dirs.
+This module extracts that spine:
+
+* :class:`StorageTier` — the abstract staging/publish/read interface that
+  ``Checkpoint`` drives.  Any future backend (object store, remote host,
+  in-memory cache) implements exactly this surface.
+* Module-level helpers (:func:`atomic_publish_dir`, :func:`retire_version_dirs`,
+  :func:`sweep_tmp_dirs`, :func:`list_version_dirs`) — the shared
+  tmp→rename→fsync and retention mechanics, used by both concrete tiers and
+  by the node tier's mirror/parity side-trees.
+
+Atomicity contract (paper Fig. 4): a version directory either exists complete
+under its final ``v-<K>`` name or not at all; crashes leave only ``.tmp-*``
+garbage which :func:`sweep_tmp_dirs` removes on the next start.
+"""
+from __future__ import annotations
+
+import abc
+import os
+import shutil
+from pathlib import Path
+from typing import List, Optional, Tuple
+
+_TMP_PREFIX = ".tmp-"
+_VERSION_PREFIX = "v-"
+
+
+# --------------------------------------------------------------------------
+# shared directory mechanics
+# --------------------------------------------------------------------------
+def fsync_dir(path: Path) -> None:
+    """fsync a directory so a rename inside it survives power loss."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def version_dir_name(version: int) -> str:
+    return f"{_VERSION_PREFIX}{version}"
+
+
+def staging_dir_name(version: int) -> str:
+    return f"{_TMP_PREFIX}{_VERSION_PREFIX}{version}"
+
+
+def parse_version(p: Path) -> Optional[int]:
+    """``v-<K>`` → K, else None."""
+    name = p.name
+    if not name.startswith(_VERSION_PREFIX):
+        return None
+    try:
+        return int(name[len(_VERSION_PREFIX):])
+    except ValueError:
+        return None
+
+
+def list_version_dirs(root: Path) -> List[Tuple[int, Path]]:
+    """Sorted [(version, dir)] of complete version directories under root."""
+    out = []
+    if root.is_dir():
+        for p in root.glob(f"{_VERSION_PREFIX}*"):
+            v = parse_version(p)
+            if v is not None and p.is_dir():
+                out.append((v, p))
+    return sorted(out)
+
+
+def atomic_publish_dir(staged: Path, final: Path) -> None:
+    """Atomically promote a fully-written staging dir to its final name.
+
+    A pre-existing ``final`` (same-version re-write, e.g. a retry) is removed
+    first; the parent directory is fsync'd so the rename is durable.
+    """
+    if final.exists():
+        shutil.rmtree(final)
+    final.parent.mkdir(parents=True, exist_ok=True)
+    os.replace(staged, final)
+    fsync_dir(final.parent)
+
+
+def retire_version_dirs(root: Path, keep: int) -> List[int]:
+    """Delete all but the newest ``keep`` version dirs; return kept versions."""
+    vdirs = list_version_dirs(root)
+    keep = max(1, keep)
+    for _, p in vdirs[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+    return [v for v, _ in vdirs[-keep:]]
+
+
+def sweep_tmp_dirs(root: Path) -> int:
+    """Remove torn ``.tmp-*`` staging dirs left by a crash; return count."""
+    n = 0
+    if root.is_dir():
+        for junk in root.glob(f"{_TMP_PREFIX}*"):
+            shutil.rmtree(junk, ignore_errors=True)
+            n += 1
+    return n
+
+
+# --------------------------------------------------------------------------
+# the tier interface
+# --------------------------------------------------------------------------
+class StorageTier(abc.ABC):
+    """Abstract storage tier driven by ``Checkpoint`` (stage→write→publish).
+
+    Write protocol::
+
+        staged = tier.stage(version)     # private staging directory
+        ...write files under staged...
+        tier.publish(staged, version)    # atomic rename + metadata commit
+        # or, on error:
+        tier.abort(staged)
+
+    Read protocol::
+
+        v = tier.latest_version()        # 0 if nothing restorable
+        vdir = tier.materialize(v)       # complete local dir, recovering
+                                         # from redundancy peers if needed
+    """
+
+    @abc.abstractmethod
+    def stage(self, version: int) -> Path:
+        """Create and return the staging directory for ``version``."""
+
+    @abc.abstractmethod
+    def publish(self, staged: Path, version: int,
+                extra_meta: Optional[dict] = None) -> None:
+        """Atomically promote ``staged`` to the complete version ``version``."""
+
+    @abc.abstractmethod
+    def abort(self, staged: Path) -> None:
+        """Discard a staging directory after a failed write."""
+
+    @abc.abstractmethod
+    def latest_version(self) -> int:
+        """Newest version this tier can restore (0 if none)."""
+
+    @abc.abstractmethod
+    def version_dir(self, version: int) -> Path:
+        """Path of version ``version`` (which may not exist)."""
+
+    @abc.abstractmethod
+    def invalidate_all(self) -> None:
+        """Drop every stored version (nested-checkpoint wipe, paper §2.5)."""
+
+    def materialize(self, version: int) -> Optional[Path]:
+        """Return a complete local dir for ``version``, or None.
+
+        Tiers with redundancy (partner mirror, XOR parity) override this to
+        transparently rebuild a lost local copy; the default just checks the
+        local directory.
+        """
+        vdir = self.version_dir(version)
+        return vdir if vdir.is_dir() else None

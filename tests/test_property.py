@@ -1,6 +1,8 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep — skip cleanly when absent
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 from hypothesis.extra import numpy as hnp
