@@ -1,10 +1,15 @@
-"""Paper Figs. 5/6 + Table 3: communication-recovery overhead scaling.
+"""Paper Figs. 5/6 + Table 3: communication-recovery overhead scaling,
+plus the memory-tier restore comparison (docs/architecture.md §memory tier).
 
 Fig. 5  — recovery time vs #procs for SHRINKING / NON-SHRINKING(REUSE) /
           NON-SHRINKING(NO-REUSE), 2 procs per node.
 Fig. 6  — recovery time vs procs-per-node at a fixed node count.
 Table 3 — per-phase breakdown of one NON-SHRINKING NO-REUSE recovery at the
           largest size.
+mem_restore — end-to-end ``restart_if_needed()`` latency for the same state
+          served by the memory tier (RAM shards, publish-time verified,
+          array-cache fast path) vs the PFS tier (file IO + full codec
+          decode + per-chunk digest verification); reports the speedup.
 
 The SimComm backend reproduces the recovery *bookkeeping* at sizes beyond
 what one CPU can host as real processes (threads as ranks); the real-process
@@ -12,12 +17,19 @@ path is exercised by tests/test_runtime.py and examples/train_cluster.py.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
+from pathlib import Path
+
+import numpy as np
 
 from benchmarks.common import emit
+from repro.core import Box, Checkpoint
 from repro.core.comm import ProcFailedError, RevokedError
 from repro.core.comm_sim import SimWorld
 from repro.core.env import CraftEnv
+from repro.core.mem_level import MemFabric
 
 
 def _recover_once(n_procs: int, ppn: int, policy: str, spawn: str) -> dict:
@@ -79,11 +91,87 @@ def table3(n_procs, ppn=2) -> None:
              round(s.get(phase, float("nan")), 6), "s", procs=n_procs)
 
 
+def _train_state(n_layers: int, leaf_kb: int) -> dict:
+    """A model-shaped pytree: many weight tensors + small biases, the state
+    profile a real training job checkpoints every few minutes."""
+    rng = np.random.default_rng(0)
+    n = leaf_kb * 1024 // 8
+    return {
+        f"layer{i}": {"w": rng.random(n), "b": rng.random(64)}
+        for i in range(n_layers)
+    }
+
+
+def _restore_once(base: Path, chain: str, n_layers: int, leaf_kb: int,
+                  repeats: int) -> float:
+    """Median ``restart_if_needed()`` wall time for one tier configuration.
+
+    The same train state is written once through ``chain``; each measurement
+    restores into a fresh ``Checkpoint`` so the in-memory CP-version counter
+    doesn't short-circuit the read.  Codec settings stay at their defaults
+    (chunked v1, digest verification on) for both tiers.
+    """
+    env = CraftEnv.capture({
+        "CRAFT_CP_PATH": str(base / "pfs"),
+        "CRAFT_USE_SCR": "0",
+        "CRAFT_TIER_CHAIN": chain,
+        "CRAFT_MEM_SCRATCH": str(base / "shm"),
+    })
+    state = Box(_train_state(n_layers, leaf_kb))
+    name = f"restore-{chain.replace(',', '-')}"
+    cp = Checkpoint(name, env=env)
+    cp.add("state", state)
+    cp.add("it", Box(1))
+    cp.commit()
+    cp.update_and_write()
+    cp.close()
+
+    times = []
+    for _ in range(repeats):
+        target = Box(_train_state(n_layers, leaf_kb))
+        target.value["layer0"]["w"][:] = 0.0
+        rcp = Checkpoint(name, env=env)
+        rcp.add("state", target)
+        rcp.add("it", Box(0))
+        rcp.commit()
+        t0 = time.perf_counter()
+        assert rcp.restart_if_needed()
+        times.append(time.perf_counter() - t0)
+        assert rcp.stats["restore_tier"] == chain.split(",")[0]
+        assert target.value["layer0"]["w"][0] == state.value["layer0"]["w"][0]
+        rcp.close()
+    return sorted(times)[len(times) // 2]
+
+
+def mem_restore(n_layers: int = 128, leaf_kb: int = 256,
+                repeats: int = 5) -> float:
+    """Memory-tier vs PFS restore of the same state; returns the speedup."""
+    base = Path(tempfile.mkdtemp(prefix="craft-memrestore-"))
+    mb = n_layers * leaf_kb // 1024
+    try:
+        MemFabric.instance().reset()
+        mem_s = _restore_once(base, "mem,pfs", n_layers, leaf_kb, repeats)
+        MemFabric.instance().reset()     # drop RAM: forces the PFS path
+        pfs_s = _restore_once(base, "pfs", n_layers, leaf_kb, repeats)
+    finally:
+        MemFabric.instance().reset()
+        shutil.rmtree(base, ignore_errors=True)
+    speedup = pfs_s / mem_s if mem_s > 0 else float("inf")
+    emit("mem_restore", "mem_tier", round(mem_s, 5), "s",
+         layers=n_layers, mb=mb)
+    emit("mem_restore", "pfs_tier", round(pfs_s, 5), "s",
+         layers=n_layers, mb=mb)
+    emit("mem_restore", "speedup", round(speedup, 2), "x",
+         layers=n_layers, mb=mb)
+    return speedup
+
+
 def main(full: bool = False) -> None:
     sizes = [8, 16, 32, 64, 128] + ([256, 512] if full else [])
     fig5(sizes)
     fig6(16, [1, 2, 4, 8])
     table3(sizes[-1])
+    mem_restore(n_layers=256 if full else 128)
 
 
 if __name__ == "__main__":

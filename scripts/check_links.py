@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Markdown link check for README.md and docs/ (CI docs job).
+
+Verifies that every relative markdown link resolves to an existing file or
+directory in the repository.  External (http/https/mailto) links are only
+syntax-checked, never fetched — CI must not depend on the network.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    yield REPO / "README.md"
+    yield from sorted((REPO / "docs").glob("*.md"))
+
+
+def check(md: Path) -> list:
+    errors = []
+    for target in LINK.findall(md.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            continue                      # intra-document anchor
+        path = target.split("#", 1)[0]    # strip #Lnn / heading anchors
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+        elif REPO not in resolved.parents and resolved != REPO:
+            errors.append(f"{md.relative_to(REPO)}: escapes repo -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    n = 0
+    for md in doc_files():
+        if md.exists():
+            n += 1
+            errors += check(md)
+    if not n:
+        print("no markdown files found", file=sys.stderr)
+        return 1
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {n} files: {'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -259,9 +259,12 @@ def _propagate(comps, entry, edges) -> Dict[str, int]:
 def _material_comps(comps: Dict[str, Computation]) -> set:
     """Computations whose ops touch HBM: entry + control-flow bodies.
 
-    Computations reached via ``calls=``/``to_apply=`` are fusion/reducer
-    bodies — their internal ops run on-chip and must not count toward HBM
-    traffic (the *fusion op itself*, at its call site, carries the traffic).
+    Computations reached from a *fusion* op via ``calls=``/``to_apply=`` are
+    fusion/reducer bodies — their internal ops run on-chip and must not count
+    toward HBM traffic (the *fusion op itself*, at its call site, carries the
+    traffic).  A plain ``call`` op, by contrast, is a control-flow wrapper
+    (recent XLA:CPU wraps thread-parallel fusions in ``call(...),
+    to_apply=%parallel_...``), so its callee *is* material.
     """
     entry = comps.get("__entry__")
     if entry is None:
@@ -271,7 +274,10 @@ def _material_comps(comps: Dict[str, Computation]) -> set:
     while frontier:
         comp = comps[frontier.pop()]
         for op in comp.ops:
-            for attr in ("body", "condition"):
+            attrs = ("body", "condition")
+            if op.opcode == "call":
+                attrs = ("to_apply", "calls")
+            for attr in attrs:
                 m = re.search(attr + r"=%?([\w.\-]+)", op.line)
                 if m and m.group(1) in comps and m.group(1) not in material:
                     material.add(m.group(1))

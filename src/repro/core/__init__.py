@@ -19,6 +19,7 @@ from repro.core.comm import (
 )
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
 from repro.core.env import CraftEnv
+from repro.core.mem_level import MemFabric, MemStore, MemTierError
 from repro.core.tiers import StorageTier
 
 __all__ = [
@@ -27,4 +28,5 @@ __all__ = [
     "PytreeCp", "register_adapter",
     "CommError", "FTComm", "NullComm", "ProcFailedError", "RevokedError",
     "CheckpointError", "CpBase", "IOContext", "CraftEnv", "StorageTier",
+    "MemFabric", "MemStore", "MemTierError",
 ]

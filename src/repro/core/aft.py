@@ -47,6 +47,22 @@ class AftAbortedError(RuntimeError):
     """The zone exceeded ``max_recoveries`` and gave up."""
 
 
+def _drop_failed_memory(stats: dict) -> None:
+    """Tell the memory tier which ranks' RAM died with this recovery.
+
+    The zone body re-created after recovery restores through
+    ``restart_if_needed()``; with the memory tier chained first, survivors
+    then reconstruct the failed ranks' shards from the peer replicas that
+    are still resident — no disk read.  Idempotent with the simulator's
+    fault-domain kill hooks.
+    """
+    failed = stats.get("failed")
+    if failed:
+        from repro.core.mem_level import notify_rank_failures
+
+        notify_rank_failures(failed)
+
+
 def aft_zone(
     comm: FTComm,
     body: Callable[[FTComm], T],
@@ -82,6 +98,7 @@ def aft_zone(
                 pass
             comm = comm.recover(policy=policy)
             stats = comm.last_recovery_stats()
+            _drop_failed_memory(stats)
             log.warning(
                 "AFT recovery #%d (%s): failed=%s, %.3fs",
                 recoveries, policy, stats.get("failed"),
@@ -139,3 +156,4 @@ class AftZone:
         except CommError:
             pass
         self.comm = self.comm.recover(policy=self.policy)
+        _drop_failed_memory(self.comm.last_recovery_stats())

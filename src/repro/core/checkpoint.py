@@ -11,11 +11,15 @@ Life cycle (paper Listing 2):
         ...
         cp.update_and_write(iteration, cp_freq)   # write every cp_freq iters
 
-Tiers: every write lands on the **node tier** (fast node-local storage with
-partner/XOR redundancy — the SCR analog) when enabled, and every
-``pfs_every``-th version additionally lands on the **PFS tier** (the durable
-parallel file system).  ``disable_node_level()`` is the paper's
-``disableSCR()``.
+Tiers (``CRAFT_TIER_CHAIN``, fastest first): the optional **memory tier**
+(RAM shards replicated onto peer ranks — rapid post-shrink recovery), the
+**node tier** (fast node-local storage with partner/XOR redundancy — the SCR
+analog) when enabled, and every ``pfs_every``-th version additionally lands
+on the **PFS tier** (the durable parallel file system).  Reads drain the
+chain in order; writes go through to every chained tier (the memory tier is
+skipped for a version when its budget is exceeded — :class:`MemTierError` is
+collective, so the fallback is consistent across ranks).
+``disable_node_level()`` is the paper's ``disableSCR()``.
 
 Asynchrony (paper §2.4): with ``CRAFT_WRITE_ASYNC=1`` the device→host
 snapshot (``update()``) happens inline and the file IO runs on a dedicated
@@ -24,6 +28,7 @@ on the writer thread and the caller must ``wait()`` before mutating the data.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from pathlib import Path
 from typing import Dict, Optional
@@ -62,15 +67,19 @@ class Checkpoint:
         self._node_store_factory = node_store_factory
         self._pfs: Optional[storage.VersionStore] = None
         self._node = None
+        self._mem = None
         self._writer: Optional[AsyncWriter] = None
         self.stats = {
             "writes": 0,
+            "mem_writes": 0,
+            "mem_skipped": 0,
             "node_writes": 0,
             "pfs_writes": 0,
             "bytes_written": 0,
             "write_seconds": 0.0,
             "reads": 0,
             "read_seconds": 0.0,
+            "restore_tier": None,     # label of the tier the last read used
         }
 
     # ------------------------------------------------------------------ add
@@ -96,15 +105,19 @@ class Checkpoint:
         self._committed = True
         if not self.env.enable:
             return
-        self._pfs = storage.VersionStore(
-            self.env.cp_path,
-            self.name,
-            keep_versions=self.env.keep_versions,
-            comm=self.comm,
-        )
-        if self._node_enabled and self._node_store_factory is not None:
+        chain = self.env.tier_chain
+        if "pfs" in chain:
+            self._pfs = storage.VersionStore(
+                self.env.cp_path,
+                self.name,
+                keep_versions=self.env.keep_versions,
+                comm=self.comm,
+            )
+        if "node" in chain and self._node_enabled \
+                and self._node_store_factory is not None:
             self._node = self._node_store_factory(self)
-        elif self._node_enabled and self.env.node_cp_path is not None:
+        elif "node" in chain and self._node_enabled \
+                and self.env.node_cp_path is not None:
             from repro.core.node_level import NodeStore
 
             self._node = NodeStore(
@@ -113,6 +126,10 @@ class Checkpoint:
                 comm=self.comm,
                 env=self.env,
             )
+        if "mem" in chain:
+            from repro.core.mem_level import MemStore
+
+            self._mem = MemStore(self.name, self.comm, self.env)
         if (
             self.env.write_async
             or self.env.write_async_zero_copy
@@ -139,10 +156,23 @@ class Checkpoint:
 
     def invalidate(self) -> None:
         """Wipe every stored version of this checkpoint (nested-child wipe)."""
-        if self._pfs is not None:
-            self._pfs.invalidate_all()
-        if self._node is not None:
-            self._node.invalidate_all()
+        for store, _, _ in self._chained_stores():
+            store.invalidate_all()
+
+    def _chained_stores(self):
+        """[(store, chain_slot, store.label)] in CRAFT_TIER_CHAIN order.
+
+        The chain slot ("mem"/"node"/"pfs") selects write/read *semantics*
+        (best-effort RAM, every-version node, pfs_every-gated PFS) even for
+        factory-injected stores; ``store.label`` is the display name feeding
+        stats["restore_tier"] and restore-error reports.
+        """
+        by_slot = {"mem": self._mem, "node": self._node, "pfs": self._pfs}
+        return [
+            (by_slot[slot], slot, by_slot[slot].label)
+            for slot in self.env.tier_chain
+            if by_slot[slot] is not None
+        ]
 
     # ---------------------------------------------------------------- write
     def update_and_write(
@@ -184,6 +214,8 @@ class Checkpoint:
         self._write_version(version)
 
     def _write_version(self, version: int) -> None:
+        from repro.core.mem_level import MemTierError
+
         t0 = time.perf_counter()
         wrote_bytes = sum(item.nbytes() for item in self._map.values())
         to_pfs = (
@@ -191,12 +223,21 @@ class Checkpoint:
             or self.env.pfs_every <= 1
             or version % self.env.pfs_every == 0
         )
-        if self._node is not None:
-            self._write_to_store(self._node, version)
-            self.stats["node_writes"] += 1
-        if to_pfs:
-            self._write_to_store(self._pfs, version)
-            self.stats["pfs_writes"] += 1
+        for store, slot, _ in self._chained_stores():
+            if slot == "mem":
+                # the RAM tier is best-effort write-through: a collective
+                # budget refusal skips it, the durable tiers still land
+                try:
+                    self._write_to_store(store, version)
+                    self.stats["mem_writes"] += 1
+                except MemTierError:
+                    self.stats["mem_skipped"] += 1
+            elif slot == "node":
+                self._write_to_store(store, version)
+                self.stats["node_writes"] += 1
+            elif to_pfs:
+                self._write_to_store(store, version)
+                self.stats["pfs_writes"] += 1
         # Parent published ⇒ children are now inconsistent (paper Table 1).
         nested.GLOBAL_REGISTRY.invalidate_children(self)
         self.stats["writes"] += 1
@@ -218,6 +259,9 @@ class Checkpoint:
                 chunk_bytes=self.env.chunk_bytes,
                 fanout=self._writer.run_parallel if self._writer else None,
             )
+            overrides = store.write_ctx_overrides()
+            if overrides:
+                ctx = dataclasses.replace(ctx, **overrides)
             # Independent checkpointables flush in parallel across the IO
             # pool; publish() below is the barrier that preserves per-version
             # ordering (a version is only promoted once every file landed).
@@ -272,14 +316,12 @@ class Checkpoint:
     def _agree_version(self) -> int:
         """All processes must restore the same version: min over latests."""
         local = 0
-        if self._node is not None:
-            local = max(local, self._node.latest_version())
-        if self._pfs is not None:
-            local = max(local, self._pfs.latest_version())
+        for store, _, _ in self._chained_stores():
+            local = max(local, store.latest_version())
         return self.comm.allreduce_min(local)
 
     def _read_version(self, version: int) -> None:
-        ctx = IOContext(
+        base_ctx = IOContext(
             proc_rank=self.comm.rank,
             proc_count=self.comm.size,
             compress=self.env.compress,
@@ -289,18 +331,15 @@ class Checkpoint:
             fanout=self._writer.run_parallel if self._writer else None,
         )
         errors = []
-        for store, label in ((self._node, "node"), (self._pfs, "pfs")):
-            if store is None:
+        for store, _, label in self._chained_stores():
+            try:
+                # may trigger replica / partner / XOR recovery; an
+                # unrecoverable tier falls through to the next one (the
+                # base-class materialize is a plain local-dir check)
+                vdir = store.materialize(version)
+            except CheckpointError as exc:
+                errors.append(f"{label}: {exc}")
                 continue
-            vdir = store.version_dir(version)
-            if label == "node":
-                try:
-                    # may trigger partner/XOR recovery; an unrecoverable
-                    # node tier (multi-failure) falls through to the PFS
-                    vdir = store.materialize(version)
-                except CheckpointError as exc:
-                    errors.append(f"{label}: {exc}")
-                    continue
             if vdir is None or not Path(vdir).is_dir():
                 errors.append(f"{label}: version v-{version} not present")
                 continue
@@ -310,6 +349,9 @@ class Checkpoint:
                     f"{label}: v-{version} incomplete, missing {missing[:3]}"
                 )
                 continue
+            overrides = store.read_ctx_overrides(version)
+            ctx = dataclasses.replace(base_ctx, **overrides) if overrides \
+                else base_ctx
             try:
                 # independent items restore in parallel (chunk digest checks
                 # and decompression fan out across the same pool underneath)
@@ -320,6 +362,7 @@ class Checkpoint:
                     ],
                     ctx,
                 )
+                self.stats["restore_tier"] = label
                 return
             except CheckpointError as exc:
                 errors.append(f"{label}: {exc}")

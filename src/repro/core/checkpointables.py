@@ -130,8 +130,9 @@ class NdArrayCp(CpBase):
             raise CheckpointError(
                 f"shape mismatch: stored {loaded.shape} vs live {target.shape}"
             )
+        # no _buf sync here: every write path calls update() first, so the
+        # extra copy would only slow the restore hot path down
         target[...] = loaded.astype(target.dtype, copy=False)
-        np.copyto(self._buf, target)
 
     def nbytes(self) -> int:
         return self._buf.nbytes
@@ -313,7 +314,10 @@ class PytreeCp(CpBase):
         metas = sorted(dir_path.glob("tree-*.json"))
         if not metas:
             raise CheckpointError(f"no pytree manifest under {dir_path}")
-        manifest = storage.read_json(metas[0])
+        # parse every writer's manifest once up front — the per-leaf shard
+        # merge below would otherwise re-parse them per leaf (O(leaves²))
+        parsed = [storage.read_json(mp) for mp in metas]
+        manifest = parsed[0]
         live_leaves, treedef = jax.tree_util.tree_flatten(self.box.value)
         if manifest["n_leaves"] != len(live_leaves):
             raise CheckpointError(
@@ -326,8 +330,7 @@ class PytreeCp(CpBase):
                 gshape = tuple(spec["global_shape"])
                 dtype = storage._dtype_from_name(spec["dtype"])
                 out = np.empty(gshape, dtype=dtype)
-                for mp in metas:  # merge shard sets from all writer procs
-                    m = storage.read_json(mp)
+                for m in parsed:  # merge shard sets from all writer procs
                     for sh in m["leaves"][i].get("shards", []):
                         arr = storage.read_array(dir_path / sh["file"], ctx)
                         idx = tuple(slice(s[0], s[1]) for s in sh["index"])
@@ -341,7 +344,10 @@ class PytreeCp(CpBase):
                 else:
                     new_leaves.append(jnp.asarray(out))
             elif spec["kind"] == "np":
-                new_leaves.append(storage.read_array(dir_path / spec["file"], ctx))
+                arr = storage.read_array(dir_path / spec["file"], ctx)
+                # memory-tier reads hand out read-only views of shared
+                # buffers; a tree leaf is owned by the application, so copy
+                new_leaves.append(arr if arr.flags.writeable else arr.copy())
             else:
                 new_leaves.append(_pod_unjson(spec["value"]))
         self.box.value = jax.tree_util.tree_unflatten(treedef, new_leaves)

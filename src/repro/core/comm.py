@@ -126,6 +126,18 @@ class FTComm(abc.ABC):
         """True if this process was spawned to replace a failed rank."""
         return False
 
+    def fault_domain(self) -> Optional[Any]:
+        """Backend object observing rank deaths, if any.
+
+        A fault domain exposes ``add_kill_hook(fn)``; ``fn(rank)`` fires when
+        a rank is fail-stopped, *before* peers detect the failure.  The
+        memory tier uses it to model RAM loss (a dead process's shards and
+        the replicas it held vanish).  Backends without in-process fault
+        injection (real clusters — the OS reclaims the RAM for us) return
+        None.
+        """
+        return None
+
 
 class ChannelComm:
     """Proxy routing every collective onto a fixed named channel.

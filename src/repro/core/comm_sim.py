@@ -46,6 +46,9 @@ class SimWorld:
         self._errors: Dict[int, BaseException] = {}
         self._fn: Optional[Callable] = None
         self._uid = 0
+        # fault-domain observers: fn(rank) fires inside kill() so RAM-tier
+        # state vanishes atomically with the fail-stop (see FTComm.fault_domain)
+        self._kill_hooks: List[Callable[[int], None]] = []
 
     # ---------------------------------------------------------------- launch
     def run(self, fn: Callable[["SimComm"], object], timeout: float = 120.0):
@@ -113,7 +116,16 @@ class SimWorld:
             raise RuntimeError(f"no live incarnation at (epoch {eid}, rank {rank})")
         with self._lock:
             self._dead.add(token)
+            hooks = list(self._kill_hooks)
+        for hook in hooks:
+            hook(rank)
         self.engine.mark_dead(token)
+
+    def add_kill_hook(self, fn: Callable[[int], None]) -> None:
+        """Register an observer called with the rank id on every kill()."""
+        with self._lock:
+            if fn not in self._kill_hooks:
+                self._kill_hooks.append(fn)
 
     def is_dead_token(self, token) -> bool:
         with self._lock:
@@ -229,3 +241,6 @@ class SimComm(FTComm):
 
     def is_replacement(self) -> bool:
         return self._replacement
+
+    def fault_domain(self):
+        return self._world

@@ -54,6 +54,12 @@ class IOContext:
     # Restore-time hook: maps a stored global numpy array onto the live
     # sharding/topology (elastic restore).  Installed by jax-aware types.
     device_put: Optional[Callable] = None
+    # Memory-tier fast path: maps str(path) of an array file to its already-
+    # decoded (read-only) ndarray; ``storage.read_array`` serves hits without
+    # touching the filesystem or re-running the codec.  Installed by
+    # ``MemStore.read_ctx_overrides`` (payloads are digest-verified at
+    # publish, so no re-verification happens on this path).
+    array_cache: Optional[dict] = None
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
     )

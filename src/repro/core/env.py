@@ -58,6 +58,16 @@ class CraftEnv:
     codec_version: int               # CRAFT_CODEC_VERSION: 0 legacy | 1 chunked
     chunk_bytes: int                 # CRAFT_CHUNK_BYTES (default 4 MiB)
     io_workers: int                  # CRAFT_IO_WORKERS: writer pool size
+    # --- memory tier (docs/architecture.md §memory tier) -------------------
+    tier_chain: tuple                # CRAFT_TIER_CHAIN: ordered subset of
+                                     # mem,node,pfs (default "node,pfs";
+                                     # "mem,node,pfs" enables the RAM tier)
+    mem_replicas: int                # CRAFT_MEM_REPLICAS: peer copies of each
+                                     # rank's shards (round-robin, default 1)
+    mem_budget_bytes: int            # CRAFT_MEM_BUDGET_BYTES: per-rank RAM
+                                     # cap for the memory tier (0 = unlimited)
+    mem_scratch: Optional[Path]      # CRAFT_MEM_SCRATCH: staging/materialize
+                                     # dir (default /dev/shm when writable)
 
     @staticmethod
     def capture(environ: Optional[dict] = None) -> "CraftEnv":
@@ -89,6 +99,22 @@ class CraftEnv:
         chunk_bytes = int(env.get("CRAFT_CHUNK_BYTES", str(4 * 1024 * 1024)))
         if chunk_bytes <= 0:
             raise ValueError(f"CRAFT_CHUNK_BYTES={chunk_bytes!r}")
+        chain_raw = env.get("CRAFT_TIER_CHAIN", "node,pfs").lower()
+        tier_chain = tuple(t.strip() for t in chain_raw.split(",") if t.strip())
+        if not tier_chain or len(set(tier_chain)) != len(tier_chain) or not (
+            set(tier_chain) <= {"mem", "node", "pfs"}
+        ):
+            raise ValueError(
+                f"CRAFT_TIER_CHAIN={chain_raw!r}: expected an ordered, "
+                "duplicate-free subset of mem,node,pfs"
+            )
+        mem_replicas = int(env.get("CRAFT_MEM_REPLICAS", "1"))
+        if mem_replicas < 0:
+            raise ValueError(f"CRAFT_MEM_REPLICAS={mem_replicas!r}")
+        mem_budget = int(env.get("CRAFT_MEM_BUDGET_BYTES", "0"))
+        if mem_budget < 0:
+            raise ValueError(f"CRAFT_MEM_BUDGET_BYTES={mem_budget!r}")
+        mem_scratch = env.get("CRAFT_MEM_SCRATCH")
         io_workers_raw = env.get("CRAFT_IO_WORKERS")
         if io_workers_raw is None:
             io_workers = min(4, os.cpu_count() or 1)
@@ -116,4 +142,8 @@ class CraftEnv:
             codec_version=codec_version,
             chunk_bytes=chunk_bytes,
             io_workers=io_workers,
+            tier_chain=tier_chain,
+            mem_replicas=mem_replicas,
+            mem_budget_bytes=mem_budget,
+            mem_scratch=Path(mem_scratch) if mem_scratch else None,
         )

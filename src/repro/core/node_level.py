@@ -56,7 +56,15 @@ def _node_geometry(comm):
 
 
 class NodeStore(StorageTier):
-    """Node tier for one checkpoint name (the redundancy-protected tier)."""
+    """Node tier for one checkpoint name (the redundancy-protected tier).
+
+    Tier-chain position (``CRAFT_TIER_CHAIN``): between the RAM tier
+    (:class:`repro.core.mem_level.MemStore`, fastest, survives peer-rank
+    loss via replicas) and the PFS tier (slowest, survives full-job loss) —
+    reads drain mem → node → pfs, writes go through to every chained tier.
+    """
+
+    label = "node"
 
     def __init__(self, base: Path, name: str, comm, env):
         self.base = Path(base)

@@ -206,7 +206,18 @@ def _write_array_v1(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
 
 
 def read_array(path: Path, ctx: IOContext) -> np.ndarray:
-    """Read an array written by any codec version (v0 legacy or v1 chunked)."""
+    """Read an array written by any codec version (v0 legacy or v1 chunked).
+
+    When ``ctx.array_cache`` holds a decoded array for ``path`` (memory-tier
+    restore), it is returned directly as a read-only view — callers that need
+    ownership of the buffer must copy.
+    """
+    if ctx.array_cache is not None:
+        hit = ctx.array_cache.get(str(path))
+        if hit is not None:
+            view = hit.view()
+            view.setflags(write=False)
+            return view
     if not path.exists():
         raise CheckpointError(f"missing checkpoint file {path}")
     with open(path, "rb") as fh:
@@ -338,6 +349,8 @@ class VersionStore(StorageTier):
     rename + metadata commit, then barriers again so no process reads a
     version before it is complete.
     """
+
+    label = "pfs"
 
     def __init__(
         self, base: Path, name: str, keep_versions: int = 2, comm=None,

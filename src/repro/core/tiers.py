@@ -127,6 +127,10 @@ class StorageTier(abc.ABC):
                                          # from redundancy peers if needed
     """
 
+    #: Human-readable tier name used in stats / restore-error reports; the
+    #: chain order (``CRAFT_TIER_CHAIN``) is mem → node → pfs, fastest first.
+    label: str = "tier"
+
     @abc.abstractmethod
     def stage(self, version: int) -> Path:
         """Create and return the staging directory for ``version``."""
@@ -161,3 +165,22 @@ class StorageTier(abc.ABC):
         """
         vdir = self.version_dir(version)
         return vdir if vdir.is_dir() else None
+
+    # -- per-tier IOContext adjustments -------------------------------------
+    def write_ctx_overrides(self) -> dict:
+        """IOContext field overrides for writes landing on this tier.
+
+        A tier whose durability model differs from the default on-disk codec
+        assumptions (e.g. the RAM tier, which re-verifies at publish and
+        wants single-chunk encodes) overrides this; the default is no change.
+        """
+        return {}
+
+    def read_ctx_overrides(self, version: int) -> dict:
+        """IOContext field overrides for reads served by this tier.
+
+        Called after :meth:`materialize` succeeded for ``version``; lets a
+        tier install fast paths (``array_cache``) or relax re-verification
+        for payloads it already verified.
+        """
+        return {}

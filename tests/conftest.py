@@ -6,6 +6,16 @@ import numpy as np
 import pytest
 
 from repro.core.env import CraftEnv
+from repro.core.mem_level import MemFabric
+
+
+@pytest.fixture(autouse=True)
+def _mem_fabric_isolation():
+    """The memory-tier fabric is process-global; wipe it around every test so
+    checkpoint names reused across tests can't serve stale RAM state."""
+    MemFabric.instance().reset()
+    yield
+    MemFabric.instance().reset()
 
 
 @pytest.fixture()

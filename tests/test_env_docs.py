@@ -1,0 +1,45 @@
+"""docs/env_reference.md must stay in sync with core/env.py.
+
+Two-way check: every ``CRAFT_*`` knob the code reads is documented as a
+table row, and no table row documents a knob the code no longer mentions.
+"""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+ENV_PY = REPO / "src" / "repro" / "core" / "env.py"
+DOC = REPO / "docs" / "env_reference.md"
+
+_KNOB = re.compile(r"CRAFT_[A-Z0-9_]+")
+
+
+def _code_knobs() -> set:
+    return set(_KNOB.findall(ENV_PY.read_text()))
+
+
+def _doc_row_knobs() -> set:
+    rows = set()
+    for line in DOC.read_text().splitlines():
+        if line.startswith("| `CRAFT_"):
+            rows.update(_KNOB.findall(line.split("|")[1]))
+    return rows
+
+
+def test_every_code_knob_documented():
+    missing = _code_knobs() - _doc_row_knobs()
+    assert not missing, (
+        f"knobs read by core/env.py but missing from docs/env_reference.md "
+        f"tables: {sorted(missing)}"
+    )
+
+
+def test_no_stale_doc_entries():
+    stale = _doc_row_knobs() - _code_knobs()
+    assert not stale, (
+        f"docs/env_reference.md documents knobs core/env.py no longer "
+        f"mentions: {sorted(stale)}"
+    )
+
+
+def test_doc_has_rows():
+    assert len(_doc_row_knobs()) >= 20   # sanity: the table parser works
