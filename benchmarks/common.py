@@ -1,17 +1,28 @@
-"""Shared benchmark helpers: CSV emission + timing."""
+"""Shared benchmark helpers: CSV emission + timing + JSON artifact dump."""
 from __future__ import annotations
 
+import json
 import time
 from contextlib import contextmanager
 
 _ROWS = []
+_RECORDS = []
 
 
 def emit(bench: str, name: str, value, unit: str, **extra) -> None:
     tags = ",".join(f"{k}={v}" for k, v in extra.items())
     line = f"{bench},{name},{value},{unit}" + (f",{tags}" if tags else "")
     _ROWS.append(line)
+    _RECORDS.append({"bench": bench, "name": name, "value": value,
+                     "unit": unit, **extra})
     print(line, flush=True)
+
+
+def dump_json(path: str) -> None:
+    """Write every record emitted so far as a JSON array (CI artifact)."""
+    with open(path, "w") as fh:
+        json.dump(_RECORDS, fh, indent=1)
+    print(f"wrote {len(_RECORDS)} records to {path}", flush=True)
 
 
 @contextmanager

@@ -33,7 +33,7 @@ import time
 from pathlib import Path
 from typing import Dict, Optional
 
-from repro.core import checkpointables, nested, storage
+from repro.core import checkpointables, nested, storage, tiers
 from repro.core.async_writer import AsyncWriter
 from repro.core.comm import ChannelComm, NullComm
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
@@ -69,13 +69,21 @@ class Checkpoint:
         self._node = None
         self._mem = None
         self._writer: Optional[AsyncWriter] = None
+        # Per-tier-slot delta state: the chunk manifests of the last version
+        # written to (or restored from) that tier, diffed against at the next
+        # write.  {"version", "deps": set, "files": {rel: manifest}}
+        self._delta_state: Dict[str, dict] = {}
         self.stats = {
             "writes": 0,
             "mem_writes": 0,
             "mem_skipped": 0,
             "node_writes": 0,
             "pfs_writes": 0,
-            "bytes_written": 0,
+            "bytes_written": 0,       # logical payload size (all tiers)
+            "tier_bytes_written": 0,  # bytes physically written by the codec
+            "delta_chunks_total": 0,
+            "delta_chunks_skipped": 0,   # chunks written as refs, not bytes
+            "delta_compactions": 0,
             "write_seconds": 0.0,
             "reads": 0,
             "read_seconds": 0.0,
@@ -156,6 +164,7 @@ class Checkpoint:
 
     def invalidate(self) -> None:
         """Wipe every stored version of this checkpoint (nested-child wipe)."""
+        self._delta_state.clear()
         for store, _, _ in self._chained_stores():
             store.invalidate_all()
 
@@ -228,15 +237,15 @@ class Checkpoint:
                 # the RAM tier is best-effort write-through: a collective
                 # budget refusal skips it, the durable tiers still land
                 try:
-                    self._write_to_store(store, version)
+                    self._write_to_store(store, version, slot)
                     self.stats["mem_writes"] += 1
                 except MemTierError:
                     self.stats["mem_skipped"] += 1
             elif slot == "node":
-                self._write_to_store(store, version)
+                self._write_to_store(store, version, slot)
                 self.stats["node_writes"] += 1
             elif to_pfs:
-                self._write_to_store(store, version)
+                self._write_to_store(store, version, slot)
                 self.stats["pfs_writes"] += 1
         # Parent published ⇒ children are now inconsistent (paper Table 1).
         nested.GLOBAL_REGISTRY.invalidate_children(self)
@@ -244,10 +253,31 @@ class Checkpoint:
         self.stats["bytes_written"] += wrote_bytes
         self.stats["write_seconds"] += time.perf_counter() - t0
 
-    def _write_to_store(self, store, version: int) -> None:
+    def _delta_plan(self, slot: str) -> Optional[dict]:
+        """Delta state to diff against for this write, or None for a full
+        write.  Compaction: when the prospective chain (this version + the
+        previous version + its recorded bases) would exceed
+        ``CRAFT_DELTA_MAX_CHAIN`` versions, fall back to a self-contained
+        write so restore/retention never walk unbounded chains."""
+        if not self.env.delta or slot == "mem":
+            return None
+        state = self._delta_state.get(slot)
+        if state is None:
+            return None
+        prospective = {state["version"]} | set(state["deps"])
+        if 1 + len(prospective) > self.env.delta_max_chain:
+            self.stats["delta_compactions"] += 1
+            return None
+        return state
+
+    def _write_to_store(self, store, version: int, slot: str = "pfs") -> None:
         staged = store.stage(version)
+        delta_state = self._delta_plan(slot)
+        delta_on = self.env.delta and slot != "mem"
         try:
             checksums: dict = {}
+            chunks_db: dict = {}
+            io_stats: dict = {}
             ctx = IOContext(
                 proc_rank=self.comm.rank,
                 proc_count=self.comm.size,
@@ -258,6 +288,10 @@ class Checkpoint:
                 codec_version=self.env.codec_version,
                 chunk_bytes=self.env.chunk_bytes,
                 fanout=self._writer.run_parallel if self._writer else None,
+                delta_prev=delta_state["files"] if delta_state else None,
+                delta_base=delta_state["version"] if delta_state else 0,
+                chunks_db=chunks_db if delta_on else None,
+                io_stats=io_stats,
             )
             overrides = store.write_ctx_overrides()
             if overrides:
@@ -271,6 +305,20 @@ class Checkpoint:
                 sub.mkdir(parents=True, exist_ok=True)
                 jobs.append(lambda item=item, sub=sub: item.write(sub, ctx))
             storage.run_jobs(jobs, ctx)
+            deps: set = set()
+            if delta_on:
+                # Any ref chunk chains this version on the previous one (and,
+                # transitively, on its bases); record the dependency set in
+                # the version dir so retention pins bases and restore can
+                # check chain completeness without opening array headers.
+                if delta_state is not None and any(
+                    m.get("refs", 0) for m in chunks_db.values()
+                ):
+                    deps = {delta_state["version"]} | set(delta_state["deps"])
+                storage.write_json(
+                    staged / tiers.delta_deps_name(self.comm.rank),
+                    {"version": version, "deps": sorted(deps)},
+                )
             store.publish(
                 staged,
                 version,
@@ -280,11 +328,19 @@ class Checkpoint:
                     # rank 0's view of the per-file digest manifest; restore
                     # checks these files exist before reading the version
                     "checksums": checksums,
+                    **({"delta_deps": sorted(deps)} if delta_on else {}),
                 },
             )
         except BaseException:
             store.abort(staged)
             raise
+        if delta_on:
+            self._delta_state[slot] = {
+                "version": version, "deps": deps, "files": chunks_db,
+            }
+        self.stats["tier_bytes_written"] += io_stats.get("bytes", 0)
+        self.stats["delta_chunks_total"] += io_stats.get("chunks", 0)
+        self.stats["delta_chunks_skipped"] += io_stats.get("ref_chunks", 0)
 
     # ----------------------------------------------------------------- read
     def restart_if_needed(self, iteration_box=None) -> bool:
@@ -314,11 +370,42 @@ class Checkpoint:
         return True
 
     def _agree_version(self) -> int:
-        """All processes must restore the same version: min over latests."""
+        """All processes must restore the same version: min over the best
+        *chain-complete* version of each tier, so every rank falls back
+        together when a delta version's base chain is gone somewhere."""
         local = 0
         for store, _, _ in self._chained_stores():
-            local = max(local, store.latest_version())
+            local = max(local, self._restorable_version(store))
         return self.comm.allreduce_min(local)
+
+    def _restorable_version(self, store) -> int:
+        """Newest version of ``store`` whose full delta-base chain is present.
+
+        Versions whose directory is not locally visible (e.g. a node-tier
+        version recoverable from a partner/parity peer) are trusted here and
+        re-validated after materialization in ``_read_version``.
+        """
+        latest = store.latest_version()
+        if latest <= 0:
+            return 0
+        meta = store.meta() if hasattr(store, "meta") else {}
+        candidates = sorted(
+            {int(v) for v in meta.get("versions", [])} | {latest},
+            reverse=True,
+        )
+        for version in candidates:
+            if version > latest:
+                continue
+            vdir = Path(store.version_dir(version))
+            if not vdir.is_dir():
+                if version == latest:
+                    return version  # the store claims it (peer-recoverable,
+                    #                 e.g. node mirror/XOR) — validated at read
+                continue            # stale metadata entry — skip
+            deps = tiers.read_delta_deps(vdir)
+            if all(Path(store.version_dir(b)).is_dir() for b in deps):
+                return version
+        return 0
 
     def _read_version(self, version: int) -> None:
         base_ctx = IOContext(
@@ -331,7 +418,7 @@ class Checkpoint:
             fanout=self._writer.run_parallel if self._writer else None,
         )
         errors = []
-        for store, _, label in self._chained_stores():
+        for store, slot, label in self._chained_stores():
             try:
                 # may trigger replica / partner / XOR recovery; an
                 # unrecoverable tier falls through to the next one (the
@@ -349,9 +436,19 @@ class Checkpoint:
                     f"{label}: v-{version} incomplete, missing {missing[:3]}"
                 )
                 continue
-            overrides = store.read_ctx_overrides(version)
-            ctx = dataclasses.replace(base_ctx, **overrides) if overrides \
-                else base_ctx
+            # Delta chain: every base version the v2 refs resolve through
+            # must be materialized on this same tier before reading; a hole
+            # in the chain fails this tier explicitly (no decode crash).
+            try:
+                base_dirs = self._materialize_chain(store, Path(vdir), version)
+            except CheckpointError as exc:
+                errors.append(f"{label}: v-{version} {exc}")
+                continue
+            overrides = dict(store.read_ctx_overrides(version))
+            overrides.setdefault("rel_root", Path(vdir))
+            if base_dirs:
+                overrides.setdefault("base_dirs", base_dirs)
+            ctx = dataclasses.replace(base_ctx, **overrides)
             try:
                 # independent items restore in parallel (chunk digest checks
                 # and decompression fan out across the same pool underneath)
@@ -363,12 +460,90 @@ class Checkpoint:
                     ctx,
                 )
                 self.stats["restore_tier"] = label
+                self._prime_delta_state(version, restored_slot=slot)
                 return
             except CheckpointError as exc:
                 errors.append(f"{label}: {exc}")
         raise CheckpointError(
             f"could not restore {self.name!r} v-{version}: " + "; ".join(errors)
         )
+
+    def _materialize_chain(self, store, vdir: Path, version: int) -> dict:
+        """Materialize every delta-base version ``vdir`` depends on; returns
+        {base_version: Path}.  Raises :class:`CheckpointError` naming the
+        first base that is absent from this tier."""
+        deps = tiers.read_delta_deps(vdir)
+        base_dirs = {}
+        for base in sorted(deps, reverse=True):
+            try:
+                bdir = store.materialize(base)
+            except CheckpointError as exc:
+                raise CheckpointError(
+                    f"delta base v-{base} unrecoverable: {exc}"
+                ) from exc
+            if bdir is None or not Path(bdir).is_dir():
+                raise CheckpointError(
+                    f"delta base v-{base} is missing (chain broken — the "
+                    "version cannot be reassembled on this tier)"
+                )
+            base_dirs[base] = Path(bdir)
+        return base_dirs
+
+    def _prime_delta_state(self, version: int, restored_slot: str) -> None:
+        """Seed per-tier delta state after a restore so the *first* write of
+        the resumed run can already skip clean chunks.
+
+        The chunk digests come from the memory tier's decoded shards when the
+        restore was served from RAM (no disk read at all); otherwise from a
+        header-only scan of each disk tier's version directory.  Only tiers
+        that locally hold ``version`` are primed — a tier without it simply
+        does a full write next time.
+        """
+        if not self.env.delta:
+            return
+        mem_files = None
+        if restored_slot == "mem" and self._mem is not None:
+            mem_files = self._mem.chunk_digests(version, self.env.chunk_bytes)
+        for store, slot, _ in self._chained_stores():
+            if slot == "mem":
+                continue
+            vdir = Path(store.version_dir(version))
+            if not vdir.is_dir():
+                continue
+            files = mem_files if mem_files is not None \
+                else self._delta_files_from_dir(vdir)
+            if not files:
+                continue
+            self._delta_state[slot] = {
+                "version": version,
+                "deps": tiers.read_delta_deps(vdir),
+                "files": files,
+            }
+
+    def _delta_files_from_dir(self, vdir: Path) -> dict:
+        """Header-only chunk-manifest scan of a version directory (disk-tier
+        delta priming).  Files whose raw digests are unknowable (v0 blobs,
+        compressed v1 chunks digest post-compression bytes) are skipped and
+        will simply be full-written next version."""
+        files = {}
+        for p in sorted(q for q in vdir.rglob("*") if q.is_file()):
+            mf = storage.read_chunk_manifest(p)
+            if mf is None or mf["chunk_bytes"] != self.env.chunk_bytes:
+                continue
+            if mf["fmt"] == storage.CODEC_V1 and mf["compress"] == "zstd":
+                continue    # v1+zstd digests the compressed bytes — no rdigest
+            if mf["checksum"] == "none":
+                continue    # written without digests — nothing to diff
+            chunks = mf["chunks"]
+            rdigests = [list(c.get("rdigest", c.get("digest", [0, 0])))
+                        for c in chunks]
+            files[str(p.relative_to(vdir))] = {
+                "rdigests": rdigests,
+                "ulens": [int(c["ulen"]) for c in chunks],
+                "nbytes": mf["nbytes"],
+                "chunk_bytes": mf["chunk_bytes"],
+            }
+        return files
 
     @staticmethod
     def _manifest_missing(store, vdir: Path, version: int) -> list:

@@ -60,6 +60,24 @@ class IOContext:
     # ``MemStore.read_ctx_overrides`` (payloads are digest-verified at
     # publish, so no re-verification happens on this path).
     array_cache: Optional[dict] = None
+    # --- delta codec (on-disk format v2) -----------------------------------
+    # Write side: ``delta_prev`` maps each file's manifest name to the chunk
+    # manifest of the previous version on the *same tier*
+    # ({"rdigests", "ulens", "nbytes", "chunk_bytes"}); a chunk whose raw
+    # digest matches is recorded as a ``{ref: delta_base}`` entry instead of
+    # being re-encoded and re-written.  ``chunks_db`` collects the manifests
+    # of the version being written so the next version can diff against it.
+    delta_prev: Optional[dict] = None
+    delta_base: int = 0
+    chunks_db: Optional[dict] = None
+    # Read side: version → materialized directory of every delta-base version
+    # the chain needs; refs resolve against ``base_dirs[ref] / relpath`` where
+    # relpath is the file's path relative to ``rel_root``.
+    base_dirs: Optional[dict] = None
+    # Physical-IO accounting: {"bytes", "chunks", "ref_chunks"} actually
+    # written, filled by the codec (delta savings show up here, while
+    # ``Checkpoint.stats['bytes_written']`` stays the logical payload size).
+    io_stats: Optional[dict] = None
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
     )
@@ -68,6 +86,22 @@ class IOContext:
         if self.checksum_db is not None:
             with self._lock:
                 self.checksum_db[rel_name] = digest
+
+    def record_chunks(self, rel_name: str, manifest: dict) -> None:
+        """Collect one file's chunk manifest for the next version's diff."""
+        if self.chunks_db is not None:
+            with self._lock:
+                self.chunks_db[rel_name] = manifest
+
+    def record_io(self, nbytes: int, chunks: int = 0, ref_chunks: int = 0) -> None:
+        """Account bytes/chunks physically written (vs skipped as refs)."""
+        if self.io_stats is not None:
+            with self._lock:
+                self.io_stats["bytes"] = self.io_stats.get("bytes", 0) + nbytes
+                self.io_stats["chunks"] = self.io_stats.get("chunks", 0) + chunks
+                self.io_stats["ref_chunks"] = (
+                    self.io_stats.get("ref_chunks", 0) + ref_chunks
+                )
 
 
 class CpBase(abc.ABC):

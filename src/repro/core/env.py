@@ -56,8 +56,15 @@ class CraftEnv:
                                      # (default crc32; v1 files always store
                                      # the kernel fletcher digest when on)
     codec_version: int               # CRAFT_CODEC_VERSION: 0 legacy | 1 chunked
+                                     # | 2 chunk-delta (incremental)
     chunk_bytes: int                 # CRAFT_CHUNK_BYTES (default 4 MiB)
     io_workers: int                  # CRAFT_IO_WORKERS: writer pool size
+    delta: bool                      # CRAFT_DELTA: skip unchanged chunks by
+                                     # diffing against the previous version
+                                     # (implies codec v2; default off)
+    delta_max_chain: int             # CRAFT_DELTA_MAX_CHAIN: max versions in
+                                     # a delta chain before a full rewrite
+                                     # (compaction; default 4)
     # --- memory tier (docs/architecture.md §memory tier) -------------------
     tier_chain: tuple                # CRAFT_TIER_CHAIN: ordered subset of
                                      # mem,node,pfs (default "node,pfs";
@@ -94,8 +101,19 @@ class CraftEnv:
         if checksum not in ("crc32", "fletcher", "none"):
             raise ValueError(f"CRAFT_CHECKSUM={checksum!r}")
         codec_version = int(env.get("CRAFT_CODEC_VERSION", "1"))
-        if codec_version not in (0, 1):
+        if codec_version not in (0, 1, 2):
             raise ValueError(f"CRAFT_CODEC_VERSION={codec_version!r}")
+        delta = _bool(env, "CRAFT_DELTA", codec_version == 2)
+        if delta and codec_version == 0:
+            raise ValueError(
+                "CRAFT_DELTA=1 needs the chunked codec "
+                "(CRAFT_CODEC_VERSION >= 1, got 0)"
+            )
+        if delta:
+            codec_version = 2        # delta writes are format v2
+        delta_max_chain = int(env.get("CRAFT_DELTA_MAX_CHAIN", "4"))
+        if delta_max_chain < 1:
+            raise ValueError(f"CRAFT_DELTA_MAX_CHAIN={delta_max_chain!r}")
         chunk_bytes = int(env.get("CRAFT_CHUNK_BYTES", str(4 * 1024 * 1024)))
         if chunk_bytes <= 0:
             raise ValueError(f"CRAFT_CHUNK_BYTES={chunk_bytes!r}")
@@ -142,6 +160,8 @@ class CraftEnv:
             codec_version=codec_version,
             chunk_bytes=chunk_bytes,
             io_workers=io_workers,
+            delta=delta,
+            delta_max_chain=delta_max_chain,
             tier_chain=tier_chain,
             mem_replicas=mem_replicas,
             mem_budget_bytes=mem_budget,

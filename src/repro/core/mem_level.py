@@ -315,8 +315,12 @@ class MemStore(StorageTier):
 
     def write_ctx_overrides(self) -> dict:
         # single-chunk, uncompressed encode: the staged file is decoded back
-        # at publish, so chunking/compression only add work
-        return {"chunk_bytes": _ONE_CHUNK, "compress": "none"}
+        # at publish, so chunking/compression only add work.  Delta encoding
+        # is forced off — the fabric stores fully-decoded arrays, so a delta
+        # staged file would only add a resolve pass at publish.
+        return {"chunk_bytes": _ONE_CHUNK, "compress": "none",
+                "codec_version": min(self.env.codec_version, 1),
+                "delta_prev": None, "chunks_db": None}
 
     def publish(self, staged: Path, version: int,
                 extra_meta: Optional[dict] = None) -> None:
@@ -449,6 +453,42 @@ class MemStore(StorageTier):
                 out.write_bytes(entry.blob)
         self._caches = {version: cache}
         return vdir
+
+    def chunk_digests(self, version: int, chunk_bytes: int) -> Optional[dict]:
+        """Per-file raw chunk digests of ``version``, straight from RAM.
+
+        Serves the delta codec's diff pass after a memory-tier restore: the
+        fabric already holds every array *decoded*, so re-chunking the byte
+        view at ``chunk_bytes`` granularity and digesting each slice yields
+        exactly the ``rdigests`` a disk tier's v1/v2 file records — without a
+        single disk read.  Returns ``{rel: {"rdigests", "ulens", "nbytes",
+        "chunk_bytes"}}`` for every array entry reachable for ``version``,
+        or None when the version is not completely resident.
+        """
+        chunk_bytes = max(1, int(chunk_bytes))
+        world = self.fabric.versions(self.name).get(version)
+        if world is None:
+            return None
+        out: Dict[str, dict] = {}
+        for owner in range(world):
+            mv, _ = self.fabric.lookup(self.name, owner, version)
+            if mv is None:
+                return None         # incomplete — caller falls back to disk
+            for rel, entry in mv.files.items():
+                if entry.array is None or rel in out:
+                    continue
+                flat = np.ascontiguousarray(entry.array)
+                flat = (flat.reshape(-1).view(np.uint8).reshape(-1)
+                        if flat.nbytes else np.empty(0, dtype=np.uint8))
+                rdigests = checksum_ops.digest_chunks(flat, chunk_bytes)
+                ulens = [
+                    min(chunk_bytes, flat.size - off)
+                    for off in range(0, flat.size, chunk_bytes)
+                ]
+                out[rel] = {"rdigests": rdigests, "ulens": ulens,
+                            "nbytes": int(flat.size),
+                            "chunk_bytes": chunk_bytes}
+        return out
 
     def read_ctx_overrides(self, version: int) -> dict:
         # checksum "none": payloads were digest-verified at publish (and

@@ -33,6 +33,18 @@ Every file starts ``CRFT`` + u64(header_len) + JSON header.  The header's
   chunk ``{clen, ulen, digest}`` so a reader can verify integrity chunk by
   chunk and reject truncated files explicitly.  Chunk *encoding* fans out
   across the IO worker pool via ``IOContext.fanout``.
+* **v2 (chunk-delta, fmt=2)** — the incremental codec (``CRAFT_DELTA``).
+  Every chunk's *raw* bytes are digested first (``rdigest``); a chunk whose
+  raw digest matches the previous version's manifest (threaded in via
+  ``IOContext.delta_prev``) is recorded as ``{ref: <base_version>, ulen,
+  rdigest}`` and **its bytes are not written** — a mostly-clean array costs
+  one digest pass plus a small manifest instead of a full encode + IO.
+  Dirty chunks are stored exactly like v1 literals (``{clen, ulen, digest,
+  rdigest}``).  At read time refs resolve against ``IOContext.base_dirs``:
+  the same relative path inside the base version's directory, chasing at
+  most the chain length (``CRAFT_DELTA_MAX_CHAIN`` bounds it via
+  compaction); a missing base raises an explicit :class:`CheckpointError`.
+  A delta-chain restore is bit-identical to a full-codec restore.
 """
 from __future__ import annotations
 
@@ -58,7 +70,9 @@ from repro.core.tiers import StorageTier, fsync_dir  # re-export (legacy API)
 _MAGIC = b"CRFT"
 CODEC_V0 = 0
 CODEC_V1 = 1
+CODEC_V2 = 2
 DEFAULT_CHUNK_BYTES = 4 * 1024 * 1024
+_MAX_REF_HOPS = 64       # hard bound on delta-chain chasing (cycle guard)
 
 
 def _dtype_to_name(dt: np.dtype) -> str:
@@ -80,6 +94,13 @@ def _digest_chunk(data) -> List[int]:
 
     s1, s2 = checksum_ops.digest_bytes(data)
     return [int(s1), int(s2)]
+
+
+def _digest_all_chunks(flat, chunk_bytes: int) -> List[List[int]]:
+    """Batched per-chunk digests (one device dispatch for the whole array)."""
+    from repro.kernels.checksum import ops as checksum_ops
+
+    return checksum_ops.digest_chunks(flat, chunk_bytes)
 
 
 def _as_byte_view(arr: np.ndarray) -> np.ndarray:
@@ -116,17 +137,22 @@ def write_array(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
     """Serialize ``arr`` to ``path`` using the codec ``ctx`` selects."""
     if ctx.codec_version == CODEC_V0:
         _write_array_v0(path, arr, ctx)
-    else:
+    elif ctx.codec_version == CODEC_V1:
         _write_array_v1(path, arr, ctx)
+    else:
+        _write_array_v2(path, arr, ctx)
 
 
 def _write_array_v0(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
     arr = np.ascontiguousarray(arr)
-    payload = arr.tobytes()
     if ctx.compress == "zstd":
         if _zstd is None:  # pragma: no cover
             raise CheckpointError("CRAFT_COMPRESS=zstd but zstandard missing")
-        payload = _zstd.ZstdCompressor(level=3).compress(payload)
+        payload = _zstd.ZstdCompressor(level=3).compress(arr.tobytes())
+    else:
+        # uncompressed: digest + write straight off the byte view — tobytes()
+        # would copy the whole payload for nothing
+        payload = _as_byte_view(arr)
     header = json.dumps(
         {
             "dtype": _dtype_to_name(arr.dtype),
@@ -146,6 +172,7 @@ def _write_array_v0(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
         os.fsync(fh.fileno())
     os.replace(tmp, path)
     ctx.record_checksum(_manifest_name(path, ctx), digest)
+    ctx.record_io(len(payload), chunks=1)
 
 
 def _write_array_v1(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
@@ -160,17 +187,30 @@ def _write_array_v1(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
     n = flat.size
     offsets = range(0, n, chunk_bytes) if n else range(0)
 
-    def encode(off: int):
+    # Uncompressed chunks are digested over their raw bytes, so the whole
+    # array goes through one batched kernel dispatch; compressed chunks are
+    # digested post-compression inside the fanout jobs.
+    raw_digests = (
+        _digest_all_chunks(flat, chunk_bytes)
+        if want_digest and compress != "zstd" and n else []
+    )
+
+    def encode(i: int, off: int):
         raw = flat[off: off + chunk_bytes]
         if compress == "zstd":
-            stored = _zstd.ZstdCompressor(level=3).compress(raw.tobytes())
+            # the compressor reads the buffer protocol directly — no
+            # tobytes() copy of the uncompressed chunk
+            stored = _zstd.ZstdCompressor(level=3).compress(raw)
+            digest = _digest_chunk(stored) if want_digest else [0, 0]
         else:
             stored = memoryview(raw)
-        digest = _digest_chunk(stored) if want_digest else [0, 0]
+            digest = raw_digests[i] if want_digest else [0, 0]
         return stored, {"clen": len(stored), "ulen": int(raw.size),
                         "digest": digest}
 
-    encoded = run_jobs([lambda off=off: encode(off) for off in offsets], ctx)
+    encoded = run_jobs(
+        [lambda i=i, off=off: encode(i, off)
+         for i, off in enumerate(offsets)], ctx)
     chunks_meta = [meta for _, meta in encoded]
     header = json.dumps(
         {
@@ -203,6 +243,107 @@ def _write_array_v1(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
             folded,
         )
     ctx.record_checksum(_manifest_name(path, ctx), folded)
+    ctx.record_io(sum(m["clen"] for m in chunks_meta), chunks=len(chunks_meta))
+
+
+def _write_array_v2(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
+    """Chunk-delta writer (fmt=2): digest every chunk, diff against the
+    previous version's manifest, store only the dirty chunks.
+
+    The raw-chunk digest pass runs even with ``ctx.checksum == "none"`` —
+    it *is* the change detector — and fans out across the worker pool with
+    the dirty-chunk encodes (one job per chunk via ``run_jobs``).
+    """
+    shape = list(np.shape(arr))  # before ascontiguousarray 0-d→1-d promotion
+    arr = np.ascontiguousarray(arr)
+    flat = _as_byte_view(arr)
+    chunk_bytes = max(1, int(ctx.chunk_bytes))
+    compress = ctx.compress
+    if compress == "zstd" and _zstd is None:  # pragma: no cover
+        raise CheckpointError("CRAFT_COMPRESS=zstd but zstandard missing")
+    n = flat.size
+    offsets = list(range(0, n, chunk_bytes)) if n else []
+    rel = _manifest_name(path, ctx)
+    # Previous-version manifest for this file — usable only when the byte
+    # layout is unchanged (same total size, same chunk grid); a reshaped or
+    # regridded array falls back to a full literal write.
+    prev = None
+    if ctx.delta_prev is not None:
+        cand = ctx.delta_prev.get(rel)
+        if (
+            cand is not None
+            and int(cand.get("nbytes", -1)) == int(n)
+            and int(cand.get("chunk_bytes", -1)) == chunk_bytes
+            and len(cand.get("rdigests", ())) == len(offsets)
+        ):
+            prev = cand
+
+    # Change-detection pass: digest every raw chunk in one batched kernel
+    # dispatch — this is the whole per-version cost of a clean chunk.
+    raw_digests = _digest_all_chunks(flat, chunk_bytes) if n else []
+
+    def encode(i: int, off: int):
+        raw = flat[off: off + chunk_bytes]
+        rdigest = list(raw_digests[i])
+        if prev is not None and list(prev["rdigests"][i]) == rdigest:
+            # clean chunk: reference the base version instead of re-writing
+            return None, {"ref": int(ctx.delta_base), "ulen": int(raw.size),
+                          "rdigest": rdigest}
+        if compress == "zstd":
+            stored = _zstd.ZstdCompressor(level=3).compress(raw)
+            digest = _digest_chunk(stored)
+        else:
+            stored = memoryview(raw)
+            digest = rdigest          # stored bytes == raw bytes
+        return stored, {"clen": len(stored), "ulen": int(raw.size),
+                        "digest": digest, "rdigest": rdigest}
+
+    encoded = run_jobs(
+        [lambda i=i, off=off: encode(i, off)
+         for i, off in enumerate(offsets)], ctx)
+    chunks_meta = [meta for _, meta in encoded]
+    header = json.dumps(
+        {
+            "fmt": CODEC_V2,
+            "dtype": _dtype_to_name(arr.dtype),
+            "shape": shape,
+            "compress": compress,
+            "checksum": "fletcher",   # v2 always digests (delta detector)
+            "chunk_bytes": chunk_bytes,
+            "nbytes": int(n),
+            "chunks": chunks_meta,
+        }
+    ).encode()
+    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
+    with open(tmp, "wb") as fh:
+        fh.write(_MAGIC)
+        fh.write(len(header).to_bytes(8, "little"))
+        fh.write(header)
+        for stored, _ in encoded:
+            if stored is not None:
+                fh.write(stored)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+    # manifest digest: fold the raw digests (stable across literal/ref form)
+    folded = 0
+    for meta in chunks_meta:
+        folded = zlib.crc32(
+            meta["rdigest"][0].to_bytes(4, "little")
+            + meta["rdigest"][1].to_bytes(4, "little"),
+            folded,
+        )
+    ctx.record_checksum(rel, folded)
+    n_ref = sum(1 for m in chunks_meta if "ref" in m)
+    ctx.record_chunks(rel, {
+        "rdigests": [m["rdigest"] for m in chunks_meta],
+        "ulens": [m["ulen"] for m in chunks_meta],
+        "nbytes": int(n),
+        "chunk_bytes": chunk_bytes,
+        "refs": n_ref,
+    })
+    ctx.record_io(sum(m.get("clen", 0) for m in chunks_meta),
+                  chunks=len(chunks_meta), ref_chunks=n_ref)
 
 
 def read_array(path: Path, ctx: IOContext) -> np.ndarray:
@@ -221,27 +362,61 @@ def read_array(path: Path, ctx: IOContext) -> np.ndarray:
     if not path.exists():
         raise CheckpointError(f"missing checkpoint file {path}")
     with open(path, "rb") as fh:
-        if fh.read(4) != _MAGIC:
-            raise CheckpointError(f"bad magic in {path}")
-        raw_hlen = fh.read(8)
-        if len(raw_hlen) != 8:
-            raise CheckpointError(f"truncated header in {path}")
-        hlen = int.from_bytes(raw_hlen, "little")
-        raw_header = fh.read(hlen)
-        if len(raw_header) != hlen:
-            raise CheckpointError(f"truncated header in {path}")
-        try:
-            header = json.loads(raw_header.decode())
-        except (UnicodeDecodeError, json.JSONDecodeError) as exc:
-            raise CheckpointError(f"corrupt header in {path}: {exc}") from exc
+        header = _parse_stream_header(fh, path)
         fmt = header.get("fmt", CODEC_V0)
         if fmt == CODEC_V0:
             return _read_payload_v0(fh, header, path, ctx)
         if fmt == CODEC_V1:
             return _read_payload_v1(fh, header, path, ctx)
+        if fmt == CODEC_V2:
+            return _read_payload_v2(fh, header, path, ctx)
         raise CheckpointError(
             f"{path}: format v{fmt} is newer than this reader understands"
         )
+
+
+def _parse_stream_header(fh, path: Path) -> dict:
+    """Parse magic + length-prefixed JSON header; fh is left at the payload."""
+    if fh.read(4) != _MAGIC:
+        raise CheckpointError(f"bad magic in {path}")
+    raw_hlen = fh.read(8)
+    if len(raw_hlen) != 8:
+        raise CheckpointError(f"truncated header in {path}")
+    hlen = int.from_bytes(raw_hlen, "little")
+    raw_header = fh.read(hlen)
+    if len(raw_header) != hlen:
+        raise CheckpointError(f"truncated header in {path}")
+    try:
+        return json.loads(raw_header.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as exc:
+        raise CheckpointError(f"corrupt header in {path}: {exc}") from exc
+
+
+def read_chunk_manifest(path: Path) -> Optional[dict]:
+    """Header-only read of a chunked array file (delta-diff priming).
+
+    Returns ``{"fmt", "chunk_bytes", "nbytes", "compress", "chunks"}`` for a
+    v1/v2 file, or None when the file is not a chunked CRFT array (v0 blobs,
+    JSON manifests, foreign files).  Never reads the payload.
+    """
+    try:
+        with open(path, "rb") as fh:
+            if fh.read(4) != _MAGIC:
+                return None
+            fh.seek(0)
+            header = _parse_stream_header(fh, path)
+    except (OSError, CheckpointError):
+        return None
+    if header.get("fmt", CODEC_V0) not in (CODEC_V1, CODEC_V2):
+        return None
+    return {
+        "fmt": header["fmt"],
+        "chunk_bytes": int(header.get("chunk_bytes", 0)),
+        "nbytes": int(header.get("nbytes", 0)),
+        "compress": header.get("compress", "none"),
+        "checksum": header.get("checksum", "none"),
+        "chunks": header.get("chunks", []),
+    }
 
 
 def _restore_shape(payload: bytes, header: dict, path: Path) -> np.ndarray:
@@ -321,6 +496,163 @@ def _read_payload_v1(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray
             f"expected {header['nbytes']}"
         )
     return _restore_shape(out, header, path)
+
+
+def _decompress_chunk(stored: bytes, compress: str, path: Path, i: int) -> bytes:
+    if compress != "zstd":
+        return stored
+    if _zstd is None:  # pragma: no cover
+        raise CheckpointError("file is zstd-compressed but zstandard missing")
+    try:
+        return _zstd.ZstdDecompressor().decompress(stored)
+    except _zstd.ZstdError as exc:
+        raise CheckpointError(f"corrupt zstd chunk {i} in {path}: {exc}") from exc
+
+
+def _read_payload_v2(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray:
+    """Delta-aware reader: literal chunks come from this file, ref chunks are
+    resolved from the base versions' copies of the same relative path."""
+    verify = ctx.checksum != "none"
+    chunks = header["chunks"]
+    # phase 1: sequential file IO — slurp every *literal* chunk's bytes
+    raw_chunks: List[Optional[bytes]] = []
+    for i, meta in enumerate(chunks):
+        if "ref" in meta:
+            raw_chunks.append(None)
+            continue
+        stored = fh.read(meta["clen"])
+        if len(stored) != meta["clen"]:
+            raise CheckpointError(
+                f"truncated payload in {path}: chunk {i} got "
+                f"{len(stored)}/{meta['clen']} bytes"
+            )
+        raw_chunks.append(stored)
+    if fh.read(1):
+        raise CheckpointError(f"trailing bytes after last chunk in {path}")
+
+    # phase 2: verify/decompress literals and resolve refs across the pool
+    hcache: dict = {}   # str(base file) -> (header, per-chunk payload offsets)
+    rel = None
+    if ctx.rel_root is not None:
+        try:
+            rel = path.relative_to(ctx.rel_root)
+        except ValueError:
+            rel = None
+
+    def decode(i: int) -> bytes:
+        meta = chunks[i]
+        if "ref" in meta:
+            return _resolve_ref_chunk(
+                rel, path, ctx, int(meta["ref"]), i, int(meta["ulen"]),
+                list(meta["rdigest"]), verify, hcache)
+        stored = raw_chunks[i]
+        if verify and _digest_chunk(stored) != list(meta["digest"]):
+            raise CheckpointError(f"checksum mismatch in {path} (chunk {i})")
+        out = _decompress_chunk(stored, header["compress"], path, i)
+        if len(out) != meta["ulen"]:
+            raise CheckpointError(
+                f"corrupt chunk {i} in {path}: inflated to {len(out)} "
+                f"bytes, expected {meta['ulen']}"
+            )
+        return out
+
+    parts = run_jobs([lambda i=i: decode(i) for i in range(len(chunks))], ctx)
+    out = b"".join(parts)
+    if len(out) != header["nbytes"]:
+        raise CheckpointError(
+            f"truncated payload in {path}: got {len(out)} bytes, "
+            f"expected {header['nbytes']}"
+        )
+    return _restore_shape(out, header, path)
+
+
+def _resolve_ref_chunk(
+    rel: Optional[Path], orig_path: Path, ctx: IOContext, version: int,
+    idx: int, ulen: int, rdigest: list, verify: bool, hcache: dict,
+    hops: int = 0,
+) -> bytes:
+    """Fetch chunk ``idx`` from the base version's copy of the same file,
+    chasing further refs down the chain; every failure mode is an explicit
+    :class:`CheckpointError` naming the broken base."""
+    if hops > _MAX_REF_HOPS:
+        raise CheckpointError(
+            f"{orig_path}: delta chain exceeds {_MAX_REF_HOPS} hops at chunk "
+            f"{idx} (corrupt chain)"
+        )
+    if ctx.base_dirs is None or rel is None:
+        raise CheckpointError(
+            f"{orig_path}: chunk {idx} is a delta ref to base v-{version} but "
+            "no base-version directories are available (read the file through "
+            "Checkpoint, which materializes the chain)"
+        )
+    bdir = ctx.base_dirs.get(int(version))
+    if bdir is None:
+        raise CheckpointError(
+            f"{orig_path}: delta base v-{version} is absent from the chain "
+            f"(have {sorted(ctx.base_dirs)})"
+        )
+    bpath = Path(bdir) / rel
+    cached = hcache.get(str(bpath))
+    if cached is None:
+        if not bpath.exists():
+            raise CheckpointError(
+                f"{orig_path}: delta base file {bpath} is missing "
+                f"(base v-{version} incomplete)"
+            )
+        with open(bpath, "rb") as bfh:
+            bheader = _parse_stream_header(bfh, bpath)
+            data_off = bfh.tell()
+        if bheader.get("fmt", CODEC_V0) not in (CODEC_V1, CODEC_V2):
+            raise CheckpointError(
+                f"{orig_path}: delta base {bpath} is not a chunked array file"
+            )
+        offs = []
+        off = data_off
+        for c in bheader["chunks"]:
+            offs.append(off)
+            off += int(c.get("clen", 0))
+        cached = (bheader, offs)
+        hcache[str(bpath)] = cached
+    bheader, offs = cached
+    bchunks = bheader["chunks"]
+    if idx >= len(bchunks) or int(bchunks[idx].get("ulen", -1)) != ulen:
+        raise CheckpointError(
+            f"{orig_path}: delta base {bpath} chunk grid mismatch at chunk "
+            f"{idx} (chain corrupt)"
+        )
+    bmeta = bchunks[idx]
+    if "ref" in bmeta:      # the base chunk is itself a ref — keep chasing
+        return _resolve_ref_chunk(rel, orig_path, ctx, int(bmeta["ref"]),
+                                  idx, ulen, rdigest, verify, hcache, hops + 1)
+    with open(bpath, "rb") as bfh:
+        bfh.seek(offs[idx])
+        stored = bfh.read(int(bmeta["clen"]))
+    if len(stored) != int(bmeta["clen"]):
+        raise CheckpointError(
+            f"truncated delta base chunk {idx} in {bpath}")
+    if verify and _digest_chunk(stored) != list(bmeta["digest"]):
+        raise CheckpointError(
+            f"checksum mismatch in delta base {bpath} (chunk {idx})")
+    out = _decompress_chunk(stored, bheader.get("compress", "none"),
+                            bpath, idx)
+    if len(out) != ulen:
+        raise CheckpointError(
+            f"corrupt delta base chunk {idx} in {bpath}: inflated to "
+            f"{len(out)} bytes, expected {ulen}"
+        )
+    if verify:
+        # bit-identity guard: the resolved raw bytes must match the digest
+        # the referring version recorded.  For an uncompressed base the
+        # stored digest already is the raw digest (metadata compare only).
+        raw_dig = (list(bmeta["digest"])
+                   if bheader.get("compress", "none") != "zstd"
+                   else _digest_chunk(out))
+        if raw_dig != list(rdigest):
+            raise CheckpointError(
+                f"delta ref mismatch: base {bpath} chunk {idx} content "
+                "diverged from the referring version's digest (stale base)"
+            )
+    return out
 
 
 def write_json(path: Path, obj) -> None:

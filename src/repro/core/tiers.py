@@ -23,13 +23,15 @@ garbage which :func:`sweep_tmp_dirs` removes on the next start.
 from __future__ import annotations
 
 import abc
+import json
 import os
 import shutil
 from pathlib import Path
-from typing import List, Optional, Tuple
+from typing import List, Optional, Set, Tuple
 
 _TMP_PREFIX = ".tmp-"
 _VERSION_PREFIX = "v-"
+_DELTA_DEPS_PREFIX = "deltadeps-"
 
 
 # --------------------------------------------------------------------------
@@ -87,13 +89,60 @@ def atomic_publish_dir(staged: Path, final: Path) -> None:
     fsync_dir(final.parent)
 
 
+def delta_deps_name(rank: int) -> str:
+    """Per-rank delta-dependency manifest file inside a version directory."""
+    return f"{_DELTA_DEPS_PREFIX}{rank}.json"
+
+
+def read_delta_deps(vdir: Path) -> Set[int]:
+    """Union of every rank's delta-base versions recorded in ``vdir``.
+
+    A version written by the v2 delta codec carries ``deltadeps-<rank>.json``
+    files naming the (transitive) base versions its ref chunks resolve
+    through; a version with no such files is self-contained.  Unreadable
+    manifests are ignored — the read path re-validates the chain anyway.
+    """
+    deps: Set[int] = set()
+    for p in vdir.glob(f"{_DELTA_DEPS_PREFIX}*.json"):
+        try:
+            data = json.loads(p.read_text())
+        except (OSError, ValueError):
+            continue
+        deps.update(int(v) for v in data.get("deps", []))
+    return deps
+
+
 def retire_version_dirs(root: Path, keep: int) -> List[int]:
-    """Delete all but the newest ``keep`` version dirs; return kept versions."""
+    """Delete all but the newest ``keep`` version dirs; return kept versions.
+
+    Delta pinning: a version directory referenced as a delta base by any
+    *kept* version is never retired, however old — dropping it would strand
+    every delta chained on it.  Pinning is transitive (a pinned base's own
+    bases stay pinned too); pinned versions are included in the returned
+    kept list so tier metadata keeps advertising them.
+    """
     vdirs = list_version_dirs(root)
     keep = max(1, keep)
-    for _, p in vdirs[:-keep]:
+    pinned: Set[int] = set()
+    for _, p in vdirs[-keep:]:
+        pinned |= read_delta_deps(p)
+    by_version = dict(vdirs)
+    frontier = set(pinned)
+    while frontier:             # transitive closure over recorded deps
+        nxt: Set[int] = set()
+        for v in frontier:
+            p = by_version.get(v)
+            if p is not None:
+                nxt |= read_delta_deps(p) - pinned
+        pinned |= nxt
+        frontier = nxt
+    kept = [v for v, _ in vdirs[-keep:]]
+    for v, p in vdirs[:-keep]:
+        if v in pinned:
+            kept.append(v)
+            continue
         shutil.rmtree(p, ignore_errors=True)
-    return [v for v, _ in vdirs[-keep:]]
+    return sorted(kept)
 
 
 def sweep_tmp_dirs(root: Path) -> int:
