@@ -245,9 +245,19 @@ def main(full: bool = False) -> None:
                    ignore_errors=True)
 
 
+def _schedule_overhead(full: bool = False) -> None:
+    """Scheduler sweep + preemption-flush proof (benchmarks/schedule_overhead
+    .py) — registered here so one invocation can land every scenario in a
+    single ``--json`` artifact (the CI bench-smoke job's BENCH_cr.json)."""
+    from benchmarks.schedule_overhead import main as sched_main
+
+    sched_main(full)
+
+
 _SCENARIOS = {
     "codec_throughput": codec_throughput,
     "delta_write": delta_write,
+    "schedule_overhead": _schedule_overhead,
     "table4": main,
 }
 

@@ -1,0 +1,273 @@
+"""Checkpoint-schedule overhead sweep: fixed frequency vs Daly vs per-tier.
+
+Total checkpointing overhead = write cost + rework (compute redone after a
+failure because it post-dated the last restorable version).  The paper's §4
+analysis makes frequency the dominant knob; this sweep makes the trade
+measurable.  The experiment runs the *real* :class:`CheckpointPolicy` on a
+simulated clock (deterministic, seconds of wall time for hours of simulated
+compute): per-tier write costs are modeled (mem ≪ node ≪ pfs), failures are
+drawn from an exponential MTBF process with a fixed seed, a failure wipes
+the memory tier and rolls work back to the newest node/PFS version, and the
+policy sees exactly what it would see in production — measured write costs
+via ``record_write`` EWMAs, a recovery-epoch bump per failure, restored
+interval clocks.
+
+Schedules compared on identical failure traces:
+
+* ``fixed_N`` — the classic single-level idiom: PFS write every N steps;
+* ``tiered``  — fixed per-tier cadence ``mem:1,node:8,pfs:64``;
+* ``daly_pfs`` / ``daly_tiered`` — ``CRAFT_TIER_EVERY=auto`` intervals.
+
+``preempt_flush`` additionally proves the preemption path end-to-end with
+real IO: async delta writes, a SIGTERM-style trigger, one synchronous full
+flush, and a bit-identical restore in a fresh process-equivalent.
+
+    PYTHONPATH=src:. python benchmarks/schedule_overhead.py
+    PYTHONPATH=src:. python benchmarks/cr_overhead.py schedule_overhead
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import Checkpoint, CraftEnv
+from repro.core import scheduler as sched
+from repro.core.scheduler import CheckpointPolicy
+from repro.core.tiers import StorageTier
+
+#: Simulated per-version write cost (seconds) of each tier — the mem ≪ node
+#: ≪ pfs ordering measured by cr_overhead/table4 on this container, scaled
+#: to a cluster-ish PFS latency so the trade is visible.
+TIER_COSTS = {"mem": 0.02, "node": 0.2, "pfs": 2.0}
+STEP_SECONDS = 1.0
+MTBF_SECONDS = 1000.0
+RESTART_SECONDS = 30.0         # fixed relaunch+restore penalty per failure
+
+
+class _SimTier(StorageTier):
+    """Cost-model-only tier: the policy reads write_cost()/record_write()
+    from the StorageTier base; the storage surface is never exercised."""
+
+    def __init__(self, slot: str, sim_cost: float):
+        self.label = slot
+        self.sim_cost = sim_cost
+
+    def stage(self, version):            # pragma: no cover - unused surface
+        raise NotImplementedError
+
+    def publish(self, staged, version, extra_meta=None):  # pragma: no cover
+        raise NotImplementedError
+
+    def abort(self, staged):             # pragma: no cover - unused surface
+        raise NotImplementedError
+
+    def latest_version(self) -> int:
+        return 0
+
+    def version_dir(self, version):      # pragma: no cover - unused surface
+        raise NotImplementedError
+
+    def invalidate_all(self) -> None:
+        pass
+
+
+def _failure_times(rng, horizon_s: float):
+    """Deterministic absolute failure times over the horizon (Poisson)."""
+    times, t = [], 0.0
+    while t < horizon_s:
+        t += float(rng.exponential(MTBF_SECONDS))
+        times.append(t)
+    return times
+
+
+def simulate(envmap: dict, tier_costs: dict, n_steps: int,
+             failure_times) -> dict:
+    """Run one schedule over the shared failure trace; returns overheads."""
+    env = CraftEnv.capture({
+        "CRAFT_CP_PATH": "/unused",
+        "CRAFT_MTBF_SECONDS": str(MTBF_SECONDS),
+        **envmap,
+    })
+    clk = {"t": 0.0}
+    stores = {slot: _SimTier(slot, c) for slot, c in tier_costs.items()}
+    policy = CheckpointPolicy(env, stores, clock=lambda: clk["t"])
+    goal = n_steps * STEP_SECONDS
+    work = 0.0                             # completed compute seconds
+    snap = {slot: 0.0 for slot in stores}  # work snapshot held per tier
+    fails = list(failure_times)
+    write_s = rework_s = restart_s = 0.0
+    n_writes = {slot: 0 for slot in stores}
+    n_failures = 0
+    it, version = 0, 0
+    while work < goal:
+        if fails and clk["t"] >= fails[0]:
+            fails.pop(0)
+            n_failures += 1
+            # the memory tier dies with the process; roll back to the
+            # newest durable (node/pfs) version
+            durable = max((snap[s] for s in stores if s != "mem"),
+                          default=0.0)
+            rework_s += work - durable
+            work = durable
+            snap = {slot: durable for slot in stores}
+            clk["t"] += RESTART_SECONDS
+            restart_s += RESTART_SECONDS
+            sched.notify_recovery()        # what aft.py does per recovery
+            policy.notify_restore()
+            continue
+        it += 1
+        clk["t"] += STEP_SECONDS
+        work += STEP_SECONDS
+        d = policy.need_checkpoint(it, next_version=version + 1)
+        if d.write:
+            version += 1
+            for slot in d.tiers:
+                cost = stores[slot].sim_cost
+                clk["t"] += cost
+                write_s += cost
+                stores[slot].record_write(cost)
+                snap[slot] = work
+                n_writes[slot] += 1
+            policy.record_written(d, version)
+    return {
+        "overhead_s": clk["t"] - goal,
+        "write_s": write_s,
+        "rework_s": rework_s,
+        "restart_s": restart_s,
+        "failures": n_failures,
+        "writes": dict(n_writes),
+    }
+
+
+def schedule_overhead(full: bool = False) -> None:
+    n_steps = 8000 if full else 4000
+    rng = np.random.default_rng(42)
+    # shared trace, long enough for the slowest schedule
+    fails = _failure_times(rng, horizon_s=n_steps * STEP_SECONDS * 4)
+
+    pfs_only = {"pfs": TIER_COSTS["pfs"]}
+    schedules = []
+    for freq in (5, 25, 100, 400):
+        schedules.append((f"fixed_{freq}",
+                          {"CRAFT_TIER_EVERY": f"pfs:{freq}"}, pfs_only))
+    schedules.append(("tiered",
+                      {"CRAFT_TIER_EVERY": "mem:1,node:8,pfs:64"},
+                      TIER_COSTS))
+    schedules.append(("daly_pfs", {"CRAFT_TIER_EVERY": "auto"}, pfs_only))
+    schedules.append(("daly_tiered", {"CRAFT_TIER_EVERY": "auto"},
+                      TIER_COSTS))
+
+    results = {}
+    for name, envmap, costs in schedules:
+        r = simulate(envmap, costs, n_steps, fails)
+        results[name] = r
+        emit("schedule_overhead", f"{name}_overhead", round(r["overhead_s"], 1),
+             "s", write_s=round(r["write_s"], 1),
+             rework_s=round(r["rework_s"], 1), failures=r["failures"],
+             writes=";".join(f"{k}:{v}" for k, v in r["writes"].items()))
+    fixed = {k: v["overhead_s"] for k, v in results.items()
+             if k.startswith("fixed_")}
+    best_fixed = min(fixed, key=fixed.get)
+    for adaptive in ("daly_pfs", "daly_tiered", "tiered"):
+        ratio = fixed[best_fixed] / max(1e-9, results[adaptive]["overhead_s"])
+        emit("schedule_overhead", f"{adaptive}_vs_best_fixed",
+             round(ratio, 2), "x", best_fixed=best_fixed)
+        beaten = sum(results[adaptive]["overhead_s"] < v
+                     for v in fixed.values())
+        emit("schedule_overhead", f"{adaptive}_beats_fixed_points",
+             beaten, "count", of=len(fixed))
+
+
+def preempt_flush(full: bool = False) -> None:
+    """SIGTERM-style trigger → one synchronous full flush → bit-identical
+    restore (the acceptance proof, with real IO and the delta codec on)."""
+    rng = np.random.default_rng(3)
+    mb = 8 if full else 4
+    arrays = {f"a{i}": rng.standard_normal((mb * 1024 * 1024 // 4,))
+              .astype(np.float32) for i in range(4)}
+    base = Path(tempfile.mkdtemp(prefix="craft-preempt-"))
+    envmap = {
+        "CRAFT_CP_PATH": str(base),
+        "CRAFT_USE_SCR": "0",
+        "CRAFT_WRITE_ASYNC": "1",
+        "CRAFT_DELTA": "1",
+        "CRAFT_CHUNK_BYTES": str(256 * 1024),
+    }
+    try:
+        cp = Checkpoint("preempt", env=CraftEnv.capture(envmap))
+        for k, a in arrays.items():
+            cp.add(k, a)
+        cp.commit()
+        cp.update_and_write()              # v1: async full write
+        for a in arrays.values():          # sparse update → v2 is a delta
+            a[::4096] += 1.0
+        cp.update_and_write()
+        for a in arrays.values():          # state the flush must capture
+            a[::2048] -= 0.5
+        expect = {k: a.copy() for k, a in arrays.items()}
+        cp.policy.trigger_preemption()     # what the SIGTERM handler does
+        t0 = time.perf_counter()
+        wrote = cp.update_and_write()      # sync: drains the async queue too
+        flush_s = time.perf_counter() - t0
+        final_version = cp.version
+        cp.close()
+        emit("schedule_overhead", "preempt_flush_latency",
+             round(flush_s, 4), "s", version=final_version,
+             wrote=int(wrote))
+        # fresh "job": restore and compare bit-for-bit
+        restored = {k: np.zeros_like(a) for k, a in arrays.items()}
+        cp2 = Checkpoint("preempt", env=CraftEnv.capture(envmap))
+        for k, a in restored.items():
+            cp2.add(k, a)
+        cp2.commit()
+        cp2.restart_if_needed()
+        identical = all(np.array_equal(restored[k], expect[k])
+                        for k in arrays)
+        cp2.close()
+        emit("schedule_overhead", "preempt_restore_identical",
+             int(identical), "bool", restored_version=cp2.version)
+        if not identical:
+            raise SystemExit("preempt flush did not restore bit-identically")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
+def main(full: bool = False) -> None:
+    schedule_overhead(full)
+    preempt_flush(full)
+
+
+_SCENARIOS = {
+    "schedule_overhead": schedule_overhead,
+    "preempt_flush": preempt_flush,
+}
+
+
+if __name__ == "__main__":
+    import sys
+
+    argv = sys.argv[1:]
+    run_full = "--full" in argv
+    json_out = None
+    if "--json" in argv:
+        at = argv.index("--json")
+        if at + 1 >= len(argv) or argv[at + 1].startswith("-"):
+            raise SystemExit("--json needs an output path")
+        json_out = argv[at + 1]
+    names = [a for a in argv if not a.startswith("-")
+             and (json_out is None or a != json_out)]
+    bad = [n for n in names if n not in _SCENARIOS]
+    if bad:
+        raise SystemExit(
+            f"unknown scenario(s) {bad}; choose from {sorted(_SCENARIOS)}")
+    for nm in (names or list(_SCENARIOS)):
+        _SCENARIOS[nm](run_full)
+    if json_out:
+        from benchmarks.common import dump_json
+
+        dump_json(json_out)

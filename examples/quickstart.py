@@ -2,7 +2,11 @@
 
 A toy iterative application gains application-level checkpoint/restart with
 five lines: define a Checkpoint, add() the state, commit(), restart, and
-update_and_write() inside the loop.  Run it twice to see the restart:
+the need_checkpoint()/update_and_write() pair inside the loop — the policy
+(core/scheduler.py) decides when and to which tiers a version is written;
+``cp_freq`` here is the paper's fixed-frequency gate layered on top (see
+docs/tuning.md for the adaptive Daly/per-tier knobs).  Run it twice to see
+the restart:
 
     PYTHONPATH=src python examples/quickstart.py         # runs, checkpoints
     PYTHONPATH=src python examples/quickstart.py         # resumes at iter 60
@@ -52,7 +56,10 @@ def main() -> None:
             print("simulating a crash at iteration 55 — run me again!")
             return
         iteration.value += 1
-        my_cp.update_and_write(iteration.value, cp_freq)
+        # the policy API: probe the scheduler, then write (the probe is
+        # optional — update_and_write() evaluates the same cached decision)
+        if my_cp.need_checkpoint(iteration.value, cp_freq):
+            my_cp.update_and_write(iteration.value, cp_freq)
 
     print(f"done: iteration={iteration.value - 1}, dbl={dbl.value}, "
           f"dataArr={data_arr}, |state|={float(jnp.sum(jax_state.value)):.4f}")

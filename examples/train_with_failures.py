@@ -11,6 +11,12 @@ checkpoint, and finishes — the paper's Listing 9 at framework scale.
     PYTHONPATH=src python examples/train_with_failures.py --smoke
     PYTHONPATH=src python examples/train_with_failures.py --smoke \
         --inject-failure
+
+``--schedule daly`` replaces the fixed 25-step frequency with the adaptive
+scheduler: every chained tier checkpoints on its own Young/Daly interval
+derived from its measured write cost and ``--mtbf`` (docs/tuning.md), and a
+``CRAFT_WALLTIME_SECONDS`` budget (``--walltime``) lands one final full
+checkpoint before the job dies — the SLURM-style setup, minus SLURM.
 """
 import argparse
 import time
@@ -36,6 +42,14 @@ def main() -> None:
                     help="tiny config + 30 steps (seconds, not minutes)")
     ap.add_argument("--inject-failure", action="store_true")
     ap.add_argument("--cp-dir", default="craft-train-100m")
+    ap.add_argument("--schedule", choices=("fixed", "daly"), default="fixed",
+                    help="fixed = every 25 steps; daly = per-tier adaptive "
+                         "intervals (CRAFT_TIER_EVERY=auto)")
+    ap.add_argument("--mtbf", type=float, default=600.0,
+                    help="assumed MTBF seconds feeding the Daly formula")
+    ap.add_argument("--walltime", type=float, default=0.0,
+                    help="job walltime budget seconds (0 = no guard); the "
+                         "policy lands one final full checkpoint before it")
     args = ap.parse_args()
 
     if args.smoke:
@@ -44,18 +58,27 @@ def main() -> None:
         register_config("danube-100m", build_100m())
         arch, tiny, steps, gb, sl = "danube-100m", False, args.steps, 8, 512
 
-    env = CraftEnv.capture({
+    envmap = {
         "CRAFT_CP_PATH": args.cp_dir,
         "CRAFT_USE_SCR": "0",
         "CRAFT_WRITE_ASYNC": "1",           # paper §2.4 async checkpointing
         "CRAFT_COMM_RECOVERY_POLICY": "NON-SHRINKING",
-    })
+    }
+    if args.schedule == "daly":
+        envmap["CRAFT_TIER_EVERY"] = "auto"
+        envmap["CRAFT_MTBF_SECONDS"] = str(args.mtbf)
+    if args.walltime > 0:
+        envmap["CRAFT_WALLTIME_SECONDS"] = str(args.walltime)
+        envmap["CRAFT_WALLTIME_MARGIN_SECONDS"] = "5"
+    env = CraftEnv.capture(envmap)
     n_params = get_config(arch, tiny=tiny).param_count()
     print(f"arch={arch} ({n_params / 1e6:.0f}M params), steps={steps}")
 
     tc = T.TrainConfig(
         arch=arch, tiny=tiny, steps=steps, global_batch=gb, seq_len=sl,
-        cp_freq=25, fail_at_step=steps // 2 if args.inject_failure else None)
+        # daly mode drops the fixed gate: the policy alone decides cadence
+        cp_freq=1 if args.schedule == "daly" else 25,
+        fail_at_step=steps // 2 if args.inject_failure else None)
 
     t0 = time.time()
     log_every = max(1, steps // 20)

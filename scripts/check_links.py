@@ -4,6 +4,11 @@
 Verifies that every relative markdown link resolves to an existing file or
 directory in the repository.  External (http/https/mailto) links are only
 syntax-checked, never fetched — CI must not depend on the network.
+
+Code anchors: a link fragment of the form ``path#Lnn`` (the style
+docs/paper_mapping.md and docs/tuning.md use to point into source files) is
+additionally validated — the target file must exist and be at least ``nn``
+lines long, so an anchor can never point past the end of the file it names.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+LINE_ANCHOR = re.compile(r"^L(\d+)(?:-L?(\d+))?$")  # Lnn or Lnn-Lmm
 
 
 def doc_files():
@@ -27,12 +33,23 @@ def check(md: Path) -> list:
             continue
         if target.startswith("#"):
             continue                      # intra-document anchor
-        path = target.split("#", 1)[0]    # strip #Lnn / heading anchors
+        path, _, frag = target.partition("#")   # #Lnn / heading anchors
         resolved = (md.parent / path).resolve()
         if not resolved.exists():
             errors.append(f"{md.relative_to(REPO)}: broken link -> {target}")
-        elif REPO not in resolved.parents and resolved != REPO:
+            continue
+        if REPO not in resolved.parents and resolved != REPO:
             errors.append(f"{md.relative_to(REPO)}: escapes repo -> {target}")
+            continue
+        m = LINE_ANCHOR.match(frag)
+        if m and resolved.is_file():
+            want = max(int(g) for g in m.groups() if g is not None)
+            have = sum(1 for _ in resolved.open(errors="replace"))
+            if have < want:
+                errors.append(
+                    f"{md.relative_to(REPO)}: anchor past EOF -> {target} "
+                    f"(file has {have} lines)"
+                )
     return errors
 
 

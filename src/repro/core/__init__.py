@@ -20,6 +20,7 @@ from repro.core.comm import (
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
 from repro.core.env import CraftEnv
 from repro.core.mem_level import MemFabric, MemStore, MemTierError
+from repro.core.scheduler import CheckpointPolicy, Decision, daly_interval
 from repro.core.tiers import StorageTier
 
 __all__ = [
@@ -29,4 +30,5 @@ __all__ = [
     "CommError", "FTComm", "NullComm", "ProcFailedError", "RevokedError",
     "CheckpointError", "CpBase", "IOContext", "CraftEnv", "StorageTier",
     "MemFabric", "MemStore", "MemTierError",
+    "CheckpointPolicy", "Decision", "daly_interval",
 ]

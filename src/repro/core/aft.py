@@ -63,6 +63,15 @@ def _drop_failed_memory(stats: dict) -> None:
         notify_rank_failures(failed)
 
 
+def _notify_scheduler(stats: dict) -> None:
+    """Bump the process-wide recovery epoch: every live checkpoint policy
+    resets its write-cost estimators (the survivor layout changed) and
+    forces its next write to be a full, self-contained one."""
+    from repro.core import scheduler
+
+    scheduler.notify_recovery(stats)
+
+
 def aft_zone(
     comm: FTComm,
     body: Callable[[FTComm], T],
@@ -99,6 +108,7 @@ def aft_zone(
             comm = comm.recover(policy=policy)
             stats = comm.last_recovery_stats()
             _drop_failed_memory(stats)
+            _notify_scheduler(stats)
             log.warning(
                 "AFT recovery #%d (%s): failed=%s, %.3fs",
                 recoveries, policy, stats.get("failed"),
@@ -156,4 +166,6 @@ class AftZone:
         except CommError:
             pass
         self.comm = self.comm.recover(policy=self.policy)
-        _drop_failed_memory(self.comm.last_recovery_stats())
+        stats = self.comm.last_recovery_stats()
+        _drop_failed_memory(stats)
+        _notify_scheduler(stats)

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 import queue
 from collections import deque
 from typing import Callable, List, Optional, Sequence
@@ -64,6 +65,12 @@ class AsyncWriter:
         self._pool_threads: List[threading.Thread] = []
         self._pool_lock = threading.Lock()
         self._closed = False
+        # timing taps consumed by the checkpoint scheduler: per-job wall time
+        # on the ordered lane, and the high-water mark of the queue depth
+        self.stats = {
+            "jobs": 0, "job_seconds": 0.0,
+            "last_job_seconds": 0.0, "max_pending": 0,
+        }
 
     # -- lifecycle -----------------------------------------------------------
     def _apply_pin(self) -> None:
@@ -97,14 +104,19 @@ class AsyncWriter:
             job = self._queue.get()
             if job is None:
                 return
+            t0 = time.perf_counter()
             try:
                 job()
             except BaseException as exc:  # surfaced at next wait()/submit()
                 with self._cv:
                     self._error = exc
             finally:
+                dt = time.perf_counter() - t0
                 with self._cv:
                     self._pending -= 1
+                    self.stats["jobs"] += 1
+                    self.stats["job_seconds"] += dt
+                    self.stats["last_job_seconds"] = dt
                     self._cv.notify_all()
 
     def _pool_loop(self) -> None:
@@ -122,6 +134,8 @@ class AsyncWriter:
         self._ensure_seq_started()
         with self._cv:
             self._pending += 1
+            if self._pending > self.stats["max_pending"]:
+                self.stats["max_pending"] = self._pending
         self._queue.put(job)
 
     def wait(self) -> None:
@@ -208,6 +222,14 @@ class AsyncWriter:
     def busy(self) -> bool:
         with self._cv:
             return self._pending > 0
+
+    @property
+    def pending(self) -> int:
+        """Ordered-lane jobs submitted but not yet finished — the scheduler's
+        backpressure signal: a saturated queue stretches checkpoint
+        intervals instead of stacking versions behind a slow tier."""
+        with self._cv:
+            return self._pending
 
     def _raise_pending_error(self) -> None:
         with self._cv:

@@ -9,7 +9,20 @@ Life cycle (paper Listing 2):
     cp.restart_if_needed()                 # read latest version, if any
     while ...:
         ...
-        cp.update_and_write(iteration, cp_freq)   # write every cp_freq iters
+        if cp.need_checkpoint(iteration):  # the policy decides when/where
+            cp.update_and_write(iteration)
+
+Scheduling: every committed checkpoint owns a
+:class:`~repro.core.scheduler.CheckpointPolicy` that decides, per step,
+whether to write and to which tiers — per-tier cadences or Young/Daly
+intervals (``CRAFT_TIER_EVERY``), preemption signals (``CRAFT_CP_SIGNAL``),
+and a walltime guard (``CRAFT_WALLTIME_SECONDS``); see ``docs/tuning.md``.
+The raw ``cp.update_and_write(iteration, cp_freq)`` modulo idiom from earlier
+revisions still works — ``cp_freq`` is applied as a frequency gate on top of
+the policy — but it is a **deprecated idiom**: new code should rely on the
+policy knobs (or probe ``need_checkpoint()``) instead of hand-rolled
+``iteration % freq`` checks; the two-argument form is kept for paper parity
+and back-compat.
 
 Tiers (``CRAFT_TIER_CHAIN``, fastest first): the optional **memory tier**
 (RAM shards replicated onto peer ranks — rapid post-shrink recovery), the
@@ -49,6 +62,7 @@ class Checkpoint:
         comm=None,
         env: Optional[CraftEnv] = None,
         node_store_factory=None,
+        clock=time.monotonic,
     ):
         if not name or "/" in name or name.startswith("."):
             raise ValueError(f"checkpoint name must be a valid directory name: {name!r}")
@@ -69,6 +83,11 @@ class Checkpoint:
         self._node = None
         self._mem = None
         self._writer: Optional[AsyncWriter] = None
+        # scheduling (core/scheduler.py): built at commit() once the tier
+        # chain exists; ``clock`` is injectable for deterministic tests
+        self._clock = clock
+        self._policy = None
+        self._decision_cache = None   # (iteration, version, Decision)
         # Per-tier-slot delta state: the chunk manifests of the last version
         # written to (or restored from) that tier, diffed against at the next
         # write.  {"version", "deps": set, "files": {rel: manifest}}
@@ -88,6 +107,8 @@ class Checkpoint:
             "reads": 0,
             "read_seconds": 0.0,
             "restore_tier": None,     # label of the tier the last read used
+            "preempt_flushes": 0,     # CRAFT_CP_SIGNAL-triggered sync flushes
+            "final_writes": 0,        # walltime-guard final full checkpoints
         }
 
     # ------------------------------------------------------------------ add
@@ -150,6 +171,22 @@ class Checkpoint:
                 pin_cpulist=self.env.async_thread_pin_cpulist,
                 name=f"craft-writer-{self.name}",
             )
+        from repro.core.scheduler import CheckpointPolicy
+
+        stores = {slot: store for store, slot, _ in self._chained_stores()}
+        writer = self._writer
+        self._policy = CheckpointPolicy(
+            self.env,
+            stores,
+            clock=self._clock,
+            backpressure=(lambda: writer.pending) if writer is not None
+            else None,
+            # the simulator/runtime communicators expose an empirical MTBF
+            # from their failure log; plain NullComm does not (→ None)
+            mtbf_fn=getattr(self.comm, "empirical_mtbf", None),
+        )
+        if self.env.cp_signal:
+            self._policy.install_signal_handlers()
 
     # ----------------------------------------------------- nested (subCP())
     def sub_cp(self, child: "Checkpoint") -> None:
@@ -187,79 +224,152 @@ class Checkpoint:
     def update_and_write(
         self, iteration: Optional[int] = None, cp_freq: int = 1
     ) -> bool:
-        """Write a new checkpoint version if ``iteration % cp_freq == 0``.
+        """Write a new checkpoint version if the policy schedules one.
 
-        Returns True when a version was (or began being) written.
+        ``cp_freq`` is the paper's fixed-frequency gate, applied on top of
+        the policy (deprecated idiom — prefer the ``CRAFT_TIER_EVERY`` /
+        Daly knobs; see the module docstring).  Returns True when a version
+        was (or began being) written.
         """
-        self._require_committed()
-        if not self.env.enable:
-            return False
-        if iteration is not None and cp_freq > 1 and iteration % cp_freq != 0:
+        decision = self._decide(iteration, cp_freq)
+        if not decision.write:
             return False
         version = self._version + 1
 
-        if self.env.write_async_zero_copy:
+        if decision.sync:
+            # preemption / walltime flush: drain in-flight versions, then
+            # write inline so the version is durable before returning.
+            if self._writer is not None:
+                self._writer.wait()
+            self._snapshot_and_write(version, decision)
+        elif self.env.write_async_zero_copy:
             # zero-copy: snapshot *and* IO on the writer thread; the caller
             # must wait() before mutating live data (paper §2.4).
-            self._writer.submit(lambda v=version: self._snapshot_and_write(v))
+            self._writer.submit(
+                lambda v=version, d=decision: self._snapshot_and_write(v, d))
         elif self.env.write_async:
             # copy-based: snapshot inline (cheap D2H), IO on writer thread.
             self._update_all()
-            self._writer.submit(lambda v=version: self._write_version(v))
+            self._writer.submit(
+                lambda v=version, d=decision: self._write_version(v, d))
         else:
             # synchronous: IO inline — the writer (if any) only serves
             # run_parallel fanout of per-array/per-chunk jobs.
             self._update_all()
-            self._write_version(version)
+            self._write_version(version, decision)
         self._version = version
+        self._policy.record_written(decision, version)
+        if decision.reason == "preempt":
+            self.stats["preempt_flushes"] += 1
+        if decision.final:
+            self.stats["final_writes"] += 1
         return True
+
+    # ------------------------------------------------------------ scheduling
+    @property
+    def policy(self):
+        """The :class:`CheckpointPolicy` deciding when/where to write
+        (``None`` before commit() or when checkpointing is disabled)."""
+        return self._policy
+
+    @property
+    def should_stop(self) -> bool:
+        """The application should exit its loop: a preemption flush landed
+        or the walltime guard wrote its final checkpoint."""
+        return self._policy is not None and self._policy.should_stop
+
+    def need_checkpoint(
+        self, iteration: Optional[int] = None, cp_freq: int = 1
+    ) -> bool:
+        """Should this step checkpoint?  (paper §2 ``needCheckpoint()``.)
+
+        Delegates to the :class:`CheckpointPolicy`; the decision is cached so
+        the canonical ``if cp.need_checkpoint(it): cp.update_and_write(it)``
+        pattern evaluates the policy exactly once per step.
+        """
+        return self._decide(iteration, cp_freq).write
+
+    def _decide(self, iteration: Optional[int], cp_freq: int):
+        from repro.core.scheduler import Decision
+
+        self._require_committed()
+        if not self.env.enable or self._policy is None:
+            return Decision(write=False)
+        cached = self._decision_cache
+        if cached is not None and cached[0] == iteration \
+                and cached[1] == self._version:
+            return cached[2]
+        d = self._policy.need_checkpoint(
+            iteration, cp_freq, next_version=self._version + 1)
+        # a skip with no iteration key would never invalidate (the version
+        # does not advance) — recompute those instead of pinning the cache
+        if d.write or iteration is not None:
+            self._decision_cache = (iteration, self._version, d)
+        return d
 
     def _update_all(self) -> None:
         for item in self._map.values():
             item.update()
 
-    def _snapshot_and_write(self, version: int) -> None:
+    def _snapshot_and_write(self, version: int, decision=None) -> None:
         self._update_all()
-        self._write_version(version)
+        self._write_version(version, decision)
 
-    def _write_version(self, version: int) -> None:
+    def _write_version(self, version: int, decision=None) -> None:
         from repro.core.mem_level import MemTierError
 
         t0 = time.perf_counter()
         wrote_bytes = sum(item.nbytes() for item in self._map.values())
-        to_pfs = (
-            self._node is None
-            or self.env.pfs_every <= 1
-            or version % self.env.pfs_every == 0
-        )
+        # the policy picked the tier set; a missing decision (internal
+        # callers) falls back to the legacy every-tier + pfs_every gating
+        if decision is not None:
+            slots = set(decision.tiers)
+            force_full = decision.full
+        else:
+            to_pfs = (
+                self._node is None
+                or self.env.pfs_every <= 1
+                or version % self.env.pfs_every == 0
+            )
+            slots = {s for _, s, _ in self._chained_stores()
+                     if s != "pfs" or to_pfs}
+            force_full = False
         for store, slot, _ in self._chained_stores():
+            if slot not in slots:
+                continue
+            ts = time.perf_counter()
             if slot == "mem":
                 # the RAM tier is best-effort write-through: a collective
                 # budget refusal skips it, the durable tiers still land
                 try:
-                    self._write_to_store(store, version, slot)
+                    self._write_to_store(store, version, slot, force_full)
                     self.stats["mem_writes"] += 1
                 except MemTierError:
                     self.stats["mem_skipped"] += 1
+                    continue
             elif slot == "node":
-                self._write_to_store(store, version, slot)
+                self._write_to_store(store, version, slot, force_full)
                 self.stats["node_writes"] += 1
-            elif to_pfs:
-                self._write_to_store(store, version, slot)
+            else:
+                self._write_to_store(store, version, slot, force_full)
                 self.stats["pfs_writes"] += 1
+            # feed the scheduler's per-tier cost model (EWMA on the tier)
+            store.record_write(time.perf_counter() - ts, wrote_bytes)
         # Parent published ⇒ children are now inconsistent (paper Table 1).
         nested.GLOBAL_REGISTRY.invalidate_children(self)
         self.stats["writes"] += 1
         self.stats["bytes_written"] += wrote_bytes
         self.stats["write_seconds"] += time.perf_counter() - t0
 
-    def _delta_plan(self, slot: str) -> Optional[dict]:
+    def _delta_plan(self, slot: str, force_full: bool = False) -> Optional[dict]:
         """Delta state to diff against for this write, or None for a full
-        write.  Compaction: when the prospective chain (this version + the
+        write.  ``force_full`` (preemption flush, walltime final write,
+        post-recovery write) always produces a self-contained version.
+        Compaction: when the prospective chain (this version + the
         previous version + its recorded bases) would exceed
         ``CRAFT_DELTA_MAX_CHAIN`` versions, fall back to a self-contained
         write so restore/retention never walk unbounded chains."""
-        if not self.env.delta or slot == "mem":
+        if force_full or not self.env.delta or slot == "mem":
             return None
         state = self._delta_state.get(slot)
         if state is None:
@@ -270,9 +380,10 @@ class Checkpoint:
             return None
         return state
 
-    def _write_to_store(self, store, version: int, slot: str = "pfs") -> None:
+    def _write_to_store(self, store, version: int, slot: str = "pfs",
+                        force_full: bool = False) -> None:
         staged = store.stage(version)
-        delta_state = self._delta_plan(slot)
+        delta_state = self._delta_plan(slot, force_full)
         delta_on = self.env.delta and slot != "mem"
         try:
             checksums: dict = {}
@@ -367,6 +478,10 @@ class Checkpoint:
         self._version = version
         self.stats["reads"] += 1
         self.stats["read_seconds"] += time.perf_counter() - t0
+        if self._policy is not None:
+            # restart the per-tier interval clocks so the resumed run does
+            # not immediately re-write the version it just read
+            self._policy.notify_restore()
         return True
 
     def _agree_version(self) -> int:
@@ -584,6 +699,8 @@ class Checkpoint:
     def close(self) -> None:
         if self._closed:
             return
+        if self._policy is not None:
+            self._policy.uninstall_signal_handlers()
         if self._writer is not None:
             self._writer.close()
         self._closed = True

@@ -232,6 +232,11 @@ class SimComm(FTComm):
     def failed_ranks(self) -> List[int]:
         return self._world.engine.failed_ranks(self._eid)
 
+    def empirical_mtbf(self) -> Optional[float]:
+        """Observed MTBF from the engine's failure log (None until the first
+        kill) — feeds the checkpoint scheduler's Daly intervals."""
+        return self._world.engine.empirical_mtbf()
+
     def last_recovery_stats(self) -> dict:
         return dict(self._last_recovery)
 

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import signal as _signal
 from pathlib import Path
 from typing import Optional
 
@@ -42,8 +43,10 @@ class CraftEnv:
     async_thread_pin_cpulist: tuple  # CRAFT_ASYNC_THREAD_PIN_CPULIST ("10_20")
     use_node_level: bool             # CRAFT_USE_SCR / CRAFT_USE_NODE_LEVEL (1)
     read_cp_on_restart: bool         # CRAFT_READ_CP_ON_RESTART (default: 1)
-    comm_recovery_policy: str        # NON-SHRINKING (default) | SHRINKING
-    comm_spawn_policy: str           # NO-REUSE (default) | REUSE
+    comm_recovery_policy: str        # CRAFT_COMM_RECOVERY_POLICY:
+                                     # NON-SHRINKING (default) | SHRINKING
+    comm_spawn_policy: str           # CRAFT_COMM_SPAWN_POLICY:
+                                     # NO-REUSE (default) | REUSE
     # --- TPU-era extensions (documented in DESIGN.md §2) ------------------
     node_cp_path: Optional[Path]     # CRAFT_NODE_CP_PATH   (node-tier dir)
     node_redundancy: str             # CRAFT_NODE_REDUNDANCY: LOCAL|PARTNER|XOR
@@ -75,6 +78,35 @@ class CraftEnv:
                                      # cap for the memory tier (0 = unlimited)
     mem_scratch: Optional[Path]      # CRAFT_MEM_SCRATCH: staging/materialize
                                      # dir (default /dev/shm when writable)
+    # --- adaptive scheduler (docs/tuning.md) -------------------------------
+    tier_every: tuple                # CRAFT_TIER_EVERY: per-tier cadence spec,
+                                     # "mem:1,node:8,pfs:64" counts, "auto" =
+                                     # Young/Daly intervals; empty = legacy
+                                     # (every version + CRAFT_PFS_EVERY)
+    mtbf_seconds: float              # CRAFT_MTBF_SECONDS: mean time between
+                                     # failures feeding the Daly formula
+                                     # (0 = use the communicator's empirical
+                                     # rate, else a 1-day default)
+    walltime_seconds: float          # CRAFT_WALLTIME_SECONDS: job walltime
+                                     # budget; the policy lands one final full
+                                     # checkpoint before it expires (0 = off)
+    walltime_margin_seconds: float   # CRAFT_WALLTIME_MARGIN_SECONDS: safety
+                                     # margin subtracted from the walltime on
+                                     # top of the estimated write cost
+    cp_signal: tuple                 # CRAFT_CP_SIGNAL: signal names (e.g.
+                                     # "SIGTERM,SIGUSR1") that trigger a
+                                     # synchronous flush of the deepest tier
+                                     # (batch-scheduler preemption notice)
+
+    def tier_every_for(self, slot: str):
+        """Cadence spec for a chain slot: int count, "auto", or None (legacy).
+
+        A bare ``CRAFT_TIER_EVERY=auto`` applies to every slot (stored under
+        the ``*`` wildcard); otherwise only explicitly named slots are
+        overridden and the rest keep their legacy default.
+        """
+        spec = dict(self.tier_every)
+        return spec.get(slot, spec.get("*"))
 
     @staticmethod
     def capture(environ: Optional[dict] = None) -> "CraftEnv":
@@ -133,6 +165,18 @@ class CraftEnv:
         if mem_budget < 0:
             raise ValueError(f"CRAFT_MEM_BUDGET_BYTES={mem_budget!r}")
         mem_scratch = env.get("CRAFT_MEM_SCRATCH")
+        tier_every = _parse_tier_every(env.get("CRAFT_TIER_EVERY", ""))
+        mtbf_seconds = float(env.get("CRAFT_MTBF_SECONDS", "0"))
+        if mtbf_seconds < 0:
+            raise ValueError(f"CRAFT_MTBF_SECONDS={mtbf_seconds!r}")
+        walltime_seconds = float(env.get("CRAFT_WALLTIME_SECONDS", "0"))
+        if walltime_seconds < 0:
+            raise ValueError(f"CRAFT_WALLTIME_SECONDS={walltime_seconds!r}")
+        walltime_margin = float(env.get("CRAFT_WALLTIME_MARGIN_SECONDS", "60"))
+        if walltime_margin < 0:
+            raise ValueError(
+                f"CRAFT_WALLTIME_MARGIN_SECONDS={walltime_margin!r}")
+        cp_signal = _parse_cp_signal(env.get("CRAFT_CP_SIGNAL", ""))
         io_workers_raw = env.get("CRAFT_IO_WORKERS")
         if io_workers_raw is None:
             io_workers = min(4, os.cpu_count() or 1)
@@ -166,4 +210,69 @@ class CraftEnv:
             mem_replicas=mem_replicas,
             mem_budget_bytes=mem_budget,
             mem_scratch=Path(mem_scratch) if mem_scratch else None,
+            tier_every=tier_every,
+            mtbf_seconds=mtbf_seconds,
+            walltime_seconds=walltime_seconds,
+            walltime_margin_seconds=walltime_margin,
+            cp_signal=cp_signal,
         )
+
+
+_AUTO = {"auto", "daly"}
+
+
+def _parse_tier_every(raw: str) -> tuple:
+    """``CRAFT_TIER_EVERY`` → ((slot, count|"auto"), ...).
+
+    Accepted forms: ``auto`` (every chained tier on Daly intervals),
+    ``mem:1,node:8,pfs:64`` (write counts per tier), and mixtures like
+    ``node:8,pfs:auto``.  Counts are per *checkpoint opportunity* (calls that
+    pass the ``cp_freq`` gate), so a sparse deep tier never starves.
+    """
+    raw = raw.strip().lower()
+    if not raw:
+        return ()
+    if raw in _AUTO:
+        return (("*", "auto"),)
+    out = []
+    for tok in raw.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if ":" not in tok:
+            raise ValueError(
+                f"CRAFT_TIER_EVERY entry {tok!r}: expected slot:count or "
+                "slot:auto (or a bare 'auto' for every tier)"
+            )
+        slot, val = (s.strip() for s in tok.split(":", 1))
+        if slot not in ("mem", "node", "pfs"):
+            raise ValueError(f"CRAFT_TIER_EVERY slot {slot!r}: "
+                             "expected one of mem,node,pfs")
+        if val in _AUTO:
+            out.append((slot, "auto"))
+        else:
+            count = int(val)
+            if count < 1:
+                raise ValueError(f"CRAFT_TIER_EVERY {slot}:{val}: count >= 1")
+            out.append((slot, count))
+    slots = [s for s, _ in out]
+    if len(set(slots)) != len(slots):
+        raise ValueError(f"CRAFT_TIER_EVERY={raw!r}: duplicate slot")
+    return tuple(out)
+
+
+def _parse_cp_signal(raw: str) -> tuple:
+    """``CRAFT_CP_SIGNAL`` → tuple of validated signal names ("SIGTERM", …)."""
+    names = []
+    for tok in raw.replace(";", ",").split(","):
+        tok = tok.strip().upper()
+        if not tok:
+            continue
+        if not tok.startswith("SIG"):
+            tok = "SIG" + tok
+        if not isinstance(getattr(_signal, tok, None), _signal.Signals):
+            raise ValueError(f"CRAFT_CP_SIGNAL: unknown signal {tok!r}")
+        names.append(tok)
+    if len(set(names)) != len(names):
+        raise ValueError(f"CRAFT_CP_SIGNAL={raw!r}: duplicate signal")
+    return tuple(names)

@@ -102,6 +102,32 @@ class CollectiveEngine:
         self._spawn_policy = "REUSE"
         # key -> {"arrived": {rank: value}, "done": bool, "result": ...}
         self._pending: Dict[Tuple, dict] = {}
+        # failure log feeding the checkpoint scheduler's empirical MTBF
+        self._t_birth = time.monotonic()
+        self._failure_times: List[float] = []
+
+    def _log_failure(self) -> None:
+        """Record one observed fail-stop (caller holds ``self._cv``).
+
+        Callers must only log on an actual live→dead transition — a stale
+        report of an already-dead rank double-counted would inflate the
+        failure rate and shrink every Daly interval derived from it.
+        """
+        self._failure_times.append(time.monotonic())
+
+    def empirical_mtbf(self) -> Optional[float]:
+        """Observed mean time between failures over this engine's lifetime
+        (``None`` until the first failure) — the Daly-formula input when
+        ``CRAFT_MTBF_SECONDS`` is unset."""
+        with self._cv:
+            n = len(self._failure_times)
+            if n == 0:
+                return None
+            return max(time.monotonic() - self._t_birth, 1e-9) / n
+
+    def failure_count(self) -> int:
+        with self._cv:
+            return len(self._failure_times)
 
     def set_spawn_policy(self, policy: str) -> None:
         self._spawn_policy = policy
@@ -127,10 +153,14 @@ class CollectiveEngine:
         """Fail-stop of one incarnation: breaks every (epoch, rank) slot it
         occupies."""
         with self._cv:
+            transitioned = False
             for ep in self._epochs.values():
                 for rank, occ in ep.occupants.items():
-                    if occ == token:
+                    if occ == token and rank in ep.live:
                         ep.live.discard(rank)
+                        transitioned = True
+            if transitioned:     # one incarnation death = one failure event
+                self._log_failure()
             self._cv.notify_all()
 
     def mark_rank_dead(self, eid: int, rank: int) -> None:
@@ -139,10 +169,15 @@ class CollectiveEngine:
         epochs ≤ ``eid`` are touched so a replacement that re-uses the rank
         id in a newer epoch is never hit by a stale report."""
         with self._cv:
+            transitioned = False
             for e, ep in self._epochs.items():
                 if e <= eid and rank in ep.members:
+                    if rank in ep.live or rank in ep.pending_join:
+                        transitioned = True
                     ep.live.discard(rank)
                     ep.pending_join.discard(rank)
+            if transitioned:     # ignore stale reports of already-dead ranks
+                self._log_failure()
             self._cv.notify_all()
 
     def revoke(self, eid: int) -> None:
@@ -203,6 +238,7 @@ class CollectiveEngine:
                 if deadline is not None and time.monotonic() > deadline:
                     missing = sorted(needed - set(st["arrived"]))
                     for r in missing:
+                        was_live = r in ep.live or r in ep.pending_join
                         token = ep.occupants.get(r)
                         if token is not None:
                             for e in self._epochs.values():
@@ -212,6 +248,8 @@ class CollectiveEngine:
                                         e.pending_join.discard(rk)
                         ep.live.discard(r)
                         ep.pending_join.discard(r)
+                        if was_live:
+                            self._log_failure()
                     self._cv.notify_all()
                     raise ProcFailedError(
                         f"collective deadline exceeded, stragglers={missing}",

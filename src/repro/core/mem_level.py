@@ -276,6 +276,11 @@ class MemStore(StorageTier):
 
     label = "mem"
 
+    # RAM writes are near-free relative to any disk tier; seeding a small
+    # prior lets the scheduler give the mem tier a tight Daly interval from
+    # the very first step instead of waiting for a measurement.
+    cost_prior_seconds = 0.01
+
     def __init__(self, name: str, comm, env, fabric: Optional[MemFabric] = None):
         self.name = name
         self.comm = comm

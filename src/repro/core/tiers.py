@@ -180,6 +180,17 @@ class StorageTier(abc.ABC):
     #: chain order (``CRAFT_TIER_CHAIN``) is mem → node → pfs, fastest first.
     label: str = "tier"
 
+    #: A-priori per-version write-cost guess (seconds) for tiers whose
+    #: latency class is known before the first write (the RAM tier overrides
+    #: this); ``None`` means "unknown until measured" — the scheduler then
+    #: schedules an immediate first full write to seed the estimate.
+    cost_prior_seconds = None
+
+    #: EWMA smoothing for :meth:`record_write` — responsive enough to track a
+    #: delta codec whose cost swings with the dirty fraction, damped enough
+    #: that one slow fsync does not thrash the schedule.
+    COST_ALPHA = 0.3
+
     @abc.abstractmethod
     def stage(self, version: int) -> Path:
         """Create and return the staging directory for ``version``."""
@@ -214,6 +225,37 @@ class StorageTier(abc.ABC):
         """
         vdir = self.version_dir(version)
         return vdir if vdir.is_dir() else None
+
+    # -- per-tier write-cost reporting ---------------------------------------
+    def record_write(self, seconds: float, nbytes: int = 0) -> None:
+        """Feed one observed version-write duration into this tier's cost
+        model (called by ``Checkpoint`` around every landed write; the
+        scheduler consumes the estimate via :meth:`write_cost`)."""
+        stats = getattr(self, "io_stats", None)
+        if stats is None:
+            stats = self.io_stats = {
+                "writes": 0, "write_seconds": 0.0,
+                "last_write_seconds": 0.0, "bytes": 0,
+            }
+        stats["writes"] += 1
+        stats["write_seconds"] += seconds
+        stats["last_write_seconds"] = seconds
+        stats["bytes"] += nbytes
+        prev = getattr(self, "_cost_ewma", None)
+        self._cost_ewma = seconds if prev is None else (
+            (1.0 - self.COST_ALPHA) * prev + self.COST_ALPHA * seconds
+        )
+
+    def write_cost(self):
+        """Estimated seconds per version write: the EWMA of observed writes,
+        falling back to :attr:`cost_prior_seconds` (``None`` = unknown)."""
+        ewma = getattr(self, "_cost_ewma", None)
+        return ewma if ewma is not None else self.cost_prior_seconds
+
+    def reset_cost(self) -> None:
+        """Drop the learned cost estimate (post-recovery: surviving ranks'
+        IO behavior may have changed with the new process layout)."""
+        self._cost_ewma = None
 
     # -- per-tier IOContext adjustments -------------------------------------
     def write_ctx_overrides(self) -> dict:

@@ -37,7 +37,7 @@ from repro.models.common import ModelConfig
 from repro.optim.adamw import OptimConfig, adamw_init
 from repro.sharding.activations import use_rules
 from repro.sharding.logical import LogicalRules, shard_specs
-from repro.train.steps import TrainStepConfig, make_train_step
+from repro.train.steps import StepTimer, TrainStepConfig, make_train_step
 
 log = logging.getLogger("craft.train")
 
@@ -133,9 +133,11 @@ def run(tc: TrainConfig, comm=None, mesh=None,
 
         jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
         losses: List[float] = []
+        timer = StepTimer()
         t0 = time.perf_counter()
         try:
             while step_box.value < tc.steps:
+                step_t0 = time.perf_counter()
                 batch_np = data.batch(cursor.step)
                 with jax.set_mesh(mesh):
                     bspec = rules.spec(
@@ -154,6 +156,11 @@ def run(tc: TrainConfig, comm=None, mesh=None,
                 step_box.value += 1
                 loss = float(metrics["loss"])
                 losses.append(loss)
+                # compute-only step time (checkpoint writes excluded) feeds
+                # the scheduler's rework model and the result stats
+                timer.observe(time.perf_counter() - step_t0)
+                if cp.policy is not None and timer.last is not None:
+                    cp.policy.observe_step_seconds(timer.last)
                 if on_step is not None:
                     on_step(step_box.value, metrics)
                 if (tc.fail_at_step is not None
@@ -165,11 +172,17 @@ def run(tc: TrainConfig, comm=None, mesh=None,
                     # epoch-0 guard: fire once, not on every AFT retry
                     raise_fault(comm_inner)
                 cp.update_and_write(step_box.value, tc.cp_freq)
+                if cp.should_stop:
+                    # preemption flush landed or the walltime guard wrote its
+                    # final checkpoint — exit the loop cleanly; the next job
+                    # (or the respawned one) resumes from that version
+                    break
             cp.wait()
             return {
                 "losses": losses,
                 "final_step": step_box.value,
                 "wall_s": time.perf_counter() - t0,
+                "step_seconds": timer.ewma,
                 "stats": dict(cp.stats),
             }
         finally:

@@ -16,6 +16,7 @@ shot; ``make_decode_step`` advances one token against a static-size cache.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -27,6 +28,45 @@ from repro.optim.adamw import OptimConfig, adamw_update
 from repro.sharding.activations import constrain, constrain_tree
 
 IGNORE = -100
+
+
+class StepTimer:
+    """Host-side wall-clock EWMA of the train-step duration.
+
+    Feeds the checkpoint scheduler's rework model: the policy converts its
+    Daly intervals (seconds) into a schedule, and drivers report the measured
+    step time via ``policy.observe_step_seconds(timer.tick())`` so the
+    estimate tracks the real loop instead of being inferred from decision
+    gaps (which include checkpoint-write time).
+    """
+
+    def __init__(self, alpha: float = 0.2, clock=time.perf_counter):
+        self._alpha = alpha
+        self._clock = clock
+        self._last_t: Optional[float] = None
+        self.last: Optional[float] = None     # most recent step, seconds
+        self.ewma: Optional[float] = None     # smoothed step seconds
+
+    def tick(self) -> Optional[float]:
+        """Mark a step boundary; returns the seconds since the previous tick
+        (None on the first call)."""
+        now = self._clock()
+        if self._last_t is None:
+            self._last_t = now
+            return None
+        dt = now - self._last_t
+        self._last_t = now
+        self.observe(dt)
+        return dt
+
+    def observe(self, seconds: float) -> None:
+        """Feed an explicitly measured step duration (drivers that time the
+        compute section directly, excluding checkpoint writes)."""
+        if seconds <= 0:
+            return
+        self.last = seconds
+        self.ewma = seconds if self.ewma is None else (
+            (1.0 - self._alpha) * self.ewma + self._alpha * seconds)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,9 +2,16 @@
 
 Two-way check: every ``CRAFT_*`` knob the code reads is documented as a
 table row, and no table row documents a knob the code no longer mentions.
+A third check walks the ``CraftEnv`` dataclass itself: every field must
+name at least one ``CRAFT_*`` knob in its declaration comment, and that
+knob must have a doc row — so adding a field without documenting it fails
+even if the knob string appears elsewhere in the file.
 """
+import dataclasses
 import re
 from pathlib import Path
+
+from repro.core.env import CraftEnv
 
 REPO = Path(__file__).resolve().parent.parent
 ENV_PY = REPO / "src" / "repro" / "core" / "env.py"
@@ -43,3 +50,44 @@ def test_no_stale_doc_entries():
 
 def test_doc_has_rows():
     assert len(_doc_row_knobs()) >= 20   # sanity: the table parser works
+
+
+def _field_knobs() -> dict:
+    """{dataclass field -> set of CRAFT_* knobs named in its declaration}.
+
+    Parses the ``CraftEnv`` class body: a field's block runs from its
+    ``name: type`` line to the next field (or the end of the annotations),
+    so continuation comments count toward the field they annotate.
+    """
+    src = ENV_PY.read_text()
+    body = src.split("class CraftEnv", 1)[1]
+    field_names = [f.name for f in dataclasses.fields(CraftEnv)]
+    blocks: dict = {}
+    current = None
+    for line in body.splitlines():
+        decl = re.match(r"\s{4}(\w+):", line)
+        if decl and decl.group(1) in field_names:
+            current = decl.group(1)
+            blocks[current] = set()
+        elif line.strip().startswith(("def ", "@staticmethod", "return ")):
+            current = None
+        if current is not None:
+            blocks[current].update(_KNOB.findall(line))
+    return blocks
+
+
+def test_every_env_field_names_a_documented_knob():
+    rows = _doc_row_knobs()
+    blocks = _field_knobs()
+    missing_comment = [f.name for f in dataclasses.fields(CraftEnv)
+                       if not blocks.get(f.name)]
+    assert not missing_comment, (
+        f"CraftEnv fields without a CRAFT_* knob named in their declaration "
+        f"comment: {missing_comment}"
+    )
+    undocumented = {f: sorted(knobs - rows)
+                    for f, knobs in blocks.items() if knobs - rows}
+    assert not undocumented, (
+        f"CraftEnv fields whose knobs lack a docs/env_reference.md row: "
+        f"{undocumented}"
+    )

@@ -1,0 +1,389 @@
+"""CheckpointPolicy edge cases: Daly monotonicity, fake-clock walltime
+guard, in-process signal flush, backpressure stretching, post-recovery
+estimator reset, and the bit-identical preemption restore."""
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import Box, Checkpoint, CraftEnv
+from repro.core import scheduler as sched
+from repro.core.checkpointables import NdArrayCp
+from repro.core.scheduler import CheckpointPolicy, daly_interval
+from repro.core.tiers import StorageTier
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+class CostTier(StorageTier):
+    """Cost-model stub: only the base-class write_cost surface is used."""
+
+    def __init__(self, slot: str):
+        self.label = slot
+
+    def stage(self, version):
+        raise NotImplementedError
+
+    def publish(self, staged, version, extra_meta=None):
+        raise NotImplementedError
+
+    def abort(self, staged):
+        raise NotImplementedError
+
+    def latest_version(self) -> int:
+        return 0
+
+    def version_dir(self, version):
+        raise NotImplementedError
+
+    def invalidate_all(self) -> None:
+        pass
+
+
+def make_policy(envmap, slots=("pfs",), clock=None, **kw):
+    env = CraftEnv.capture({"CRAFT_CP_PATH": "/unused", **envmap})
+    stores = {s: CostTier(s) for s in slots}
+    return CheckpointPolicy(env, stores, clock=clock or FakeClock(), **kw), \
+        stores
+
+
+# ---------------------------------------------------------------- the formula
+class TestDalyInterval:
+    def test_monotonic_in_cost(self):
+        mtbf = 3600.0
+        costs = [0.01, 0.1, 1.0, 10.0, 100.0]
+        intervals = [daly_interval(c, mtbf) for c in costs]
+        assert intervals == sorted(intervals)
+        assert all(a < b for a, b in zip(intervals, intervals[1:]))
+
+    def test_young_first_order_limit(self):
+        # δ ≪ M: Daly reduces to Young's √(2δM)
+        assert daly_interval(1.0, 10_000_000.0) == pytest.approx(
+            (2 * 1.0 * 10_000_000.0) ** 0.5, rel=0.01)
+
+    def test_saturates_at_mtbf(self):
+        assert daly_interval(500.0, 100.0) == 500.0   # write-cost floor
+        assert daly_interval(250.0, 120.0) == 250.0
+
+    def test_monotonic_and_continuous_across_saturation(self):
+        mtbf = 100.0
+        costs = [50.0, 150.0, 199.9, 200.0, 200.1, 400.0]
+        intervals = [daly_interval(c, mtbf) for c in costs]
+        assert intervals == sorted(intervals)
+        # no cliff at δ = 2M
+        assert abs(daly_interval(200.0, mtbf)
+                   - daly_interval(199.999, mtbf)) < 0.01
+
+    def test_degenerate_inputs(self):
+        assert daly_interval(0.0, 3600.0) == 0.0
+        assert daly_interval(1.0, 0.0) == float("inf")
+
+    def test_never_below_write_cost(self):
+        assert daly_interval(50.0, 30.0) >= 50.0
+
+
+# ---------------------------------------------------------------- env parsing
+class TestTierEveryParsing:
+    def test_bare_auto_applies_to_all(self):
+        env = CraftEnv.capture({"CRAFT_TIER_EVERY": "auto"})
+        for slot in ("mem", "node", "pfs"):
+            assert env.tier_every_for(slot) == "auto"
+
+    def test_counts_and_mixtures(self):
+        env = CraftEnv.capture(
+            {"CRAFT_TIER_EVERY": "mem:1,node:8,pfs:auto"})
+        assert env.tier_every_for("mem") == 1
+        assert env.tier_every_for("node") == 8
+        assert env.tier_every_for("pfs") == "auto"
+
+    def test_unnamed_slots_stay_legacy(self):
+        env = CraftEnv.capture({"CRAFT_TIER_EVERY": "pfs:64"})
+        assert env.tier_every_for("node") is None
+
+    @pytest.mark.parametrize("bad", [
+        "disk:3", "pfs", "pfs:0", "pfs:-2", "pfs:3,pfs:4", "pfs:x",
+    ])
+    def test_rejects(self, bad):
+        with pytest.raises(ValueError):
+            CraftEnv.capture({"CRAFT_TIER_EVERY": bad})
+
+    def test_cp_signal_parsing(self):
+        env = CraftEnv.capture({"CRAFT_CP_SIGNAL": "SIGUSR1, term"})
+        assert env.cp_signal == ("SIGUSR1", "SIGTERM")
+        with pytest.raises(ValueError):
+            CraftEnv.capture({"CRAFT_CP_SIGNAL": "SIGNOPE"})
+
+
+# ----------------------------------------------------------------- cadences
+class TestCadences:
+    def test_opportunity_counts(self):
+        policy, _ = make_policy({"CRAFT_TIER_EVERY": "node:1,pfs:3"},
+                                slots=("node", "pfs"))
+        version = 0
+        pfs_hits = []
+        for it in range(1, 10):
+            d = policy.need_checkpoint(it, next_version=version + 1)
+            assert d.write                    # node:1 writes every time
+            if "pfs" in d.tiers:
+                pfs_hits.append(it)
+            version += 1
+            policy.record_written(d, version)
+        assert pfs_hits == [3, 6, 9]
+
+    def test_probe_then_write_counts_once(self):
+        policy, _ = make_policy({"CRAFT_TIER_EVERY": "pfs:2"})
+        d1 = policy.need_checkpoint(1, next_version=1)
+        d1b = policy.need_checkpoint(1, next_version=1)   # probe again
+        assert d1.write == d1b.write is False
+        d2 = policy.need_checkpoint(2, next_version=1)
+        assert d2.write
+
+    def test_auto_seeds_then_spaces_out(self):
+        clock = FakeClock()
+        policy, stores = make_policy(
+            {"CRAFT_TIER_EVERY": "auto", "CRAFT_MTBF_SECONDS": "800"},
+            clock=clock)
+        # no cost estimate → due immediately (the seeding write)
+        d = policy.need_checkpoint(1, next_version=1)
+        assert d.write
+        stores["pfs"].record_write(1.0)
+        policy.record_written(d, 1)
+        expected = daly_interval(1.0, 800.0)
+        clock.advance(expected * 0.5)
+        assert not policy.need_checkpoint(2, next_version=2).write
+        clock.advance(expected * 0.6)
+        assert policy.need_checkpoint(3, next_version=2).write
+
+    def test_legacy_pfs_every_preserved(self):
+        # no CRAFT_TIER_EVERY → version-number modulo, bit-compatible
+        policy, _ = make_policy({"CRAFT_PFS_EVERY": "4"},
+                                slots=("node", "pfs"))
+        tiers_by_version = {}
+        for v in range(1, 9):
+            d = policy.need_checkpoint(v, next_version=v)
+            tiers_by_version[v] = d.tiers
+            policy.record_written(d, v)
+        for v, tiers in tiers_by_version.items():
+            assert ("pfs" in tiers) == (v % 4 == 0)
+            assert "node" in tiers
+
+
+# -------------------------------------------------------------- backpressure
+class TestBackpressure:
+    def test_auto_interval_stretches(self):
+        clock = FakeClock()
+        queue = {"depth": 0}
+        env = CraftEnv.capture({
+            "CRAFT_CP_PATH": "/unused", "CRAFT_TIER_EVERY": "auto",
+            "CRAFT_MTBF_SECONDS": "800",
+        })
+        stores = {"pfs": CostTier("pfs")}
+        policy = CheckpointPolicy(env, stores, clock=clock,
+                                  backpressure=lambda: queue["depth"])
+        d = policy.need_checkpoint(1, next_version=1)
+        stores["pfs"].record_write(1.0)
+        policy.record_written(d, 1)
+        base = daly_interval(1.0, 800.0)
+        clock.advance(base * 1.5)
+        queue["depth"] = 3                 # saturated → interval × 4
+        assert not policy.need_checkpoint(2, next_version=2).write
+        assert policy.stats["backpressure_stretches"] == 1
+        queue["depth"] = 0
+        assert policy.need_checkpoint(3, next_version=2).write
+
+    def test_count_cadence_defers_and_owes(self):
+        queue = {"depth": 1}
+        env = CraftEnv.capture({
+            "CRAFT_CP_PATH": "/unused", "CRAFT_TIER_EVERY": "pfs:2",
+        })
+        stores = {"pfs": CostTier("pfs")}
+        policy = CheckpointPolicy(env, stores, clock=FakeClock(),
+                                  backpressure=lambda: queue["depth"])
+        assert not policy.need_checkpoint(1, next_version=1).write
+        assert not policy.need_checkpoint(2, next_version=1).write  # deferred
+        queue["depth"] = 0
+        d = policy.need_checkpoint(3, next_version=1)   # debt repaid
+        assert d.write and d.tiers == ("pfs",)
+
+
+# ------------------------------------------------------- triggers and resets
+class TestWalltimeGuard:
+    def test_final_checkpoint_fires_once(self):
+        clock = FakeClock()
+        policy, stores = make_policy({
+            "CRAFT_TIER_EVERY": "pfs:1000",       # cadence would never fire
+            "CRAFT_WALLTIME_SECONDS": "100",
+            "CRAFT_WALLTIME_MARGIN_SECONDS": "10",
+        }, clock=clock)
+        clock.advance(50.0)
+        assert not policy.need_checkpoint(1, next_version=1).write
+        clock.advance(41.0)                       # 91 ≥ 100 − 10
+        d = policy.need_checkpoint(2, next_version=1)
+        assert d.write and d.final and d.full and d.sync
+        assert d.tiers == ("pfs",)
+        policy.record_written(d, 1)
+        assert policy.should_stop
+        clock.advance(5.0)
+        assert not policy.need_checkpoint(3, next_version=2).final
+
+    def test_margin_extends_by_estimated_write_cost(self):
+        clock = FakeClock()
+        policy, stores = make_policy({
+            "CRAFT_WALLTIME_SECONDS": "100",
+            "CRAFT_WALLTIME_MARGIN_SECONDS": "10",
+        }, clock=clock)
+        stores["pfs"].record_write(20.0)          # expensive tier
+        clock.advance(75.0)                       # 75 ≥ 100 − 10 − 20
+        assert policy.need_checkpoint(1, next_version=1).final
+
+    def test_real_checkpoint_walltime_restores(self, tmp_path):
+        clock = FakeClock()
+        env = CraftEnv.capture({
+            "CRAFT_CP_PATH": str(tmp_path), "CRAFT_USE_SCR": "0",
+            "CRAFT_WALLTIME_SECONDS": "100",
+            "CRAFT_WALLTIME_MARGIN_SECONDS": "5",
+            "CRAFT_TIER_EVERY": "pfs:1000000",    # only the guard can write
+        })
+        arr = np.arange(64, dtype=np.float64)
+        with Checkpoint("wt", env=env, clock=clock) as cp:
+            cp.add("it", Box(0))
+            cp.add("arr", arr)
+            cp.commit()
+            for it in range(1, 5):
+                clock.advance(30.0)
+                arr += 1.0
+                cp.update_and_write(it)
+                if cp.should_stop:
+                    break
+            assert cp.stats["final_writes"] == 1
+            expect = arr.copy()
+        restored = np.zeros_like(expect)
+        env2 = CraftEnv.capture({"CRAFT_CP_PATH": str(tmp_path),
+                                 "CRAFT_USE_SCR": "0"})
+        with Checkpoint("wt", env=env2) as cp2:
+            cp2.add("it", Box(0))
+            cp2.add("arr", restored)
+            cp2.commit()
+            assert cp2.restart_if_needed()
+        assert np.array_equal(restored, expect)
+
+
+class TestPreemption:
+    def test_flag_forces_sync_full_flush_of_deepest_tier(self):
+        policy, _ = make_policy(
+            {"CRAFT_TIER_EVERY": "node:1000,pfs:1000"},
+            slots=("node", "pfs"))
+        assert not policy.need_checkpoint(1, next_version=1).write
+        policy.trigger_preemption()
+        d = policy.need_checkpoint(2, next_version=1)
+        assert d.write and d.sync and d.full and d.reason == "preempt"
+        assert d.tiers == ("pfs",)                 # deepest only
+        policy.record_written(d, 1)
+        assert policy.should_stop
+        # once flushed, the trigger does not re-fire
+        assert not policy.need_checkpoint(3, next_version=2).write
+
+    def test_in_process_signal_sets_flag(self, tmp_path):
+        env = CraftEnv.capture({
+            "CRAFT_CP_PATH": str(tmp_path), "CRAFT_USE_SCR": "0",
+            "CRAFT_CP_SIGNAL": "SIGUSR1",
+        })
+        old = signal.getsignal(signal.SIGUSR1)
+        with Checkpoint("sig", env=env) as cp:
+            cp.add("x", Box(1))
+            cp.commit()
+            assert not cp.policy.preempted
+            signal.raise_signal(signal.SIGUSR1)    # no real kill in CI
+            assert cp.policy.preempted
+            assert cp.update_and_write(1, cp_freq=1000)   # gate overridden
+            assert cp.stats["preempt_flushes"] == 1
+            assert cp.should_stop
+        # close() restored the previous disposition
+        assert signal.getsignal(signal.SIGUSR1) == old
+
+    def test_preempt_flush_restores_bit_identically(self, tmp_path):
+        envmap = {
+            "CRAFT_CP_PATH": str(tmp_path), "CRAFT_USE_SCR": "0",
+            "CRAFT_WRITE_ASYNC": "1", "CRAFT_DELTA": "1",
+            "CRAFT_CHUNK_BYTES": str(64 * 1024),
+        }
+        rng = np.random.default_rng(0)
+        arr = rng.standard_normal((256 * 1024,)).astype(np.float32)
+        with Checkpoint("pre", env=CraftEnv.capture(envmap)) as cp:
+            cp.add("arr", NdArrayCp(arr))
+            cp.commit()
+            cp.update_and_write()                  # async full
+            arr[::1024] += 1.0
+            cp.update_and_write()                  # async delta
+            arr[::512] -= 0.25                     # unflushed mutation
+            expect = arr.copy()
+            cp.policy.trigger_preemption()
+            assert cp.update_and_write()           # sync full flush
+            assert cp.stats["preempt_flushes"] == 1
+        restored = np.zeros_like(expect)
+        with Checkpoint("pre", env=CraftEnv.capture(envmap)) as cp2:
+            cp2.add("arr", NdArrayCp(restored))
+            cp2.commit()
+            assert cp2.restart_if_needed()
+        assert np.array_equal(restored, expect)
+
+
+class TestRecoveryReset:
+    def test_epoch_bump_resets_estimators_and_forces_full(self):
+        policy, stores = make_policy({"CRAFT_TIER_EVERY": "pfs:1"})
+        d = policy.need_checkpoint(1, next_version=1)
+        stores["pfs"].record_write(2.0)
+        policy.record_written(d, 1)
+        assert stores["pfs"].write_cost() == 2.0
+        sched.notify_recovery()                    # what aft.py does
+        d2 = policy.need_checkpoint(2, next_version=2)
+        assert d2.write and d2.full and d2.reason == "recovery-full"
+        assert stores["pfs"].write_cost() is None  # EWMA dropped
+        assert policy.stats["recovery_resets"] == 1
+        policy.record_written(d2, 2)
+        d3 = policy.need_checkpoint(3, next_version=3)
+        assert d3.write and not d3.full            # back to deltas
+
+    def test_empirical_mtbf_from_engine(self):
+        from repro.core.ftengine import CollectiveEngine
+
+        engine = CollectiveEngine({0: 0, 1: 1})
+        assert engine.empirical_mtbf() is None
+        engine.set_occupant(0, 1, "u1")
+        engine.mark_dead("u1")
+        mtbf = engine.empirical_mtbf()
+        assert mtbf is not None and mtbf > 0
+        assert engine.failure_count() == 1
+
+    def test_policy_prefers_configured_over_empirical(self):
+        policy, _ = make_policy({"CRAFT_MTBF_SECONDS": "123"},
+                                mtbf_fn=lambda: 999.0)
+        assert policy.mtbf() == 123.0
+        policy2, _ = make_policy({}, mtbf_fn=lambda: 999.0)
+        assert policy2.mtbf() == 999.0
+        policy3, _ = make_policy({})
+        assert policy3.mtbf() == sched.DEFAULT_MTBF_SECONDS
+
+
+class TestStepTimer:
+    def test_observe_and_tick(self):
+        from repro.train.steps import StepTimer
+
+        clk = FakeClock()
+        t = StepTimer(alpha=0.5, clock=clk)
+        assert t.tick() is None
+        clk.advance(2.0)
+        assert t.tick() == 2.0
+        t.observe(4.0)
+        assert t.ewma == pytest.approx(3.0)
+        t.observe(-1.0)                            # ignored
+        assert t.last == 4.0
