@@ -35,3 +35,35 @@ def timed():
 
 def header() -> None:
     print("bench,name,value,unit,tags", flush=True)
+
+
+def run_scenarios(scenarios: dict, default, argv=None) -> None:
+    """Shared scenario CLI: ``[name ...] [--full] [--json OUT.json]``.
+
+    ``scenarios`` maps names to ``fn(full: bool)``; no names runs
+    ``default(full)``.  Used by the per-module ``__main__`` blocks
+    (cr_overhead, recovery_scaling) so the parsing lives once.
+    """
+    import sys
+
+    argv = list(sys.argv[1:] if argv is None else argv)
+    run_full = "--full" in argv
+    json_out = None
+    if "--json" in argv:
+        at = argv.index("--json")
+        if at + 1 >= len(argv) or argv[at + 1].startswith("-"):
+            raise SystemExit("--json needs an output path")
+        json_out = argv[at + 1]
+    names = [a for a in argv if not a.startswith("-")
+             and (json_out is None or a != json_out)]
+    bad = [n for n in names if n not in scenarios]
+    if bad:
+        raise SystemExit(
+            f"unknown scenario(s) {bad}; choose from {sorted(scenarios)}")
+    if names:
+        for nm in names:
+            scenarios[nm](run_full)
+    else:
+        default(run_full)
+    if json_out:
+        dump_json(json_out)

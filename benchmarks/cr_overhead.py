@@ -263,28 +263,6 @@ _SCENARIOS = {
 
 
 if __name__ == "__main__":
-    import sys
+    from benchmarks.common import run_scenarios
 
-    argv = sys.argv[1:]
-    run_full = "--full" in argv
-    json_out = None
-    if "--json" in argv:
-        at = argv.index("--json")
-        if at + 1 >= len(argv) or argv[at + 1].startswith("-"):
-            raise SystemExit("--json needs an output path")
-        json_out = argv[at + 1]
-    names = [a for a in argv if not a.startswith("-")
-             and (json_out is None or a != json_out)]
-    bad = [n for n in names if n not in _SCENARIOS]
-    if bad:
-        raise SystemExit(
-            f"unknown scenario(s) {bad}; choose from {sorted(_SCENARIOS)}")
-    if names:
-        for nm in names:
-            _SCENARIOS[nm](run_full)
-    else:
-        main(run_full)
-    if json_out:
-        from benchmarks.common import dump_json
-
-        dump_json(json_out)
+    run_scenarios(_SCENARIOS, main)

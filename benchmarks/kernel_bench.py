@@ -56,6 +56,23 @@ def xor(full: bool) -> None:
         emit("kernel_xor", f"reduce_8x{n}_bw", round(gbps, 2), "GB/s")
 
 
+def rs_erasure(full: bool) -> None:
+    """GF(2^8) matmul (jitted log/exp-table ref path) for m=1, 2 parity rows."""
+    from repro.kernels.rs_erasure import ops as rs_ops
+
+    for n in ([1 << 20] + ([1 << 23] if full else [])):
+        rng = np.random.default_rng(0)
+        stacked = rng.integers(0, 2 ** 32, (8, n), dtype=np.uint32)
+        for m in (1, 2):
+            mat = tuple(tuple(int(c) for c in row)
+                        for row in rs_ops.rs_matrix(8, m))
+            t = _time(lambda s, mat=mat: rs_ops.gf_matmul(
+                s, mat, use_pallas=False), stacked)
+            emit("kernel_rs", f"encode_m{m}_8x{n}", round(t, 1), "us")
+            gbps = 8 * n * 4 / (t / 1e6) / 1e9
+            emit("kernel_rs", f"encode_m{m}_8x{n}_bw", round(gbps, 2), "GB/s")
+
+
 def checksum(full: bool) -> None:
     for nbytes in ([1 << 22] + ([1 << 26] if full else [])):
         rng = np.random.default_rng(0)
@@ -68,6 +85,7 @@ def checksum(full: bool) -> None:
 def main(full: bool = False) -> None:
     flash(full)
     xor(full)
+    rs_erasure(full)
     checksum(full)
 
 

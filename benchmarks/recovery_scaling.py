@@ -1,5 +1,6 @@
 """Paper Figs. 5/6 + Table 3: communication-recovery overhead scaling,
-plus the memory-tier restore comparison (docs/architecture.md §memory tier).
+plus the memory-tier restore comparison (docs/architecture.md §memory tier)
+and the RS erasure-coding cost/rebuild profile.
 
 Fig. 5  — recovery time vs #procs for SHRINKING / NON-SHRINKING(REUSE) /
           NON-SHRINKING(NO-REUSE), 2 procs per node.
@@ -10,6 +11,15 @@ mem_restore — end-to-end ``restart_if_needed()`` latency for the same state
           served by the memory tier (RAM shards, publish-time verified,
           array-cache fast path) vs the PFS tier (file IO + full codec
           decode + per-chunk digest verification); reports the speedup.
+rs_repair — node-tier redundancy cost model: RS(k, m) encode throughput for
+          m=1,2 vs the XOR parity and PARTNER mirror baselines, and rebuild
+          latency for one and two simultaneous member losses
+          (docs/architecture.md §redundancy & integrity).
+
+Scenario CLI (mirrors ``cr_overhead.py``)::
+
+    PYTHONPATH=src:. python benchmarks/recovery_scaling.py \
+        [rs_repair mem_restore ...] [--full] [--json OUT.json]
 
 The SimComm backend reproduces the recovery *bookkeeping* at sizes beyond
 what one CPU can host as real processes (threads as ranks); the real-process
@@ -166,13 +176,94 @@ def mem_restore(n_layers: int = 128, leaf_kb: int = 256,
     return speedup
 
 
+def rs_repair(full: bool = False) -> None:
+    """RS(k, m) erasure coding vs PARTNER/XOR: encode cost + rebuild time.
+
+    Buffer-level (the node tier's unit of work is one member's concatenated
+    payload): PARTNER is a full payload copy per member, XOR one parity
+    buffer per group (single-loss tolerance), RS(k, m) m parity buffers
+    (any-m-loss tolerance).  Encode throughput is reported over the k·B
+    group payload; rebuild times cover one lost member (PARTNER copy-back /
+    XOR reconstruct / RS solve) and two lost members (RS m=2 only — the
+    configurations below it cannot rebuild that at all).
+    """
+    from repro.kernels.rs_erasure import ops as rs_ops
+    from repro.kernels.xor_parity import ops as xor_ops
+
+    k = 8
+    mb = 16 if full else 8
+    nbytes = mb * 1024 * 1024
+    rng = np.random.default_rng(0)
+    bufs = [rng.integers(0, 256, nbytes, dtype=np.uint8) for _ in range(k)]
+    sizes = [nbytes] * k
+    group_mb = k * mb
+    repeats = 3
+
+    def best(fn):
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fn()
+            times.append(time.perf_counter() - t0)
+        return min(times)
+
+    # -- encode cost ---------------------------------------------------------
+    t_partner = best(lambda: [bytes(b) for b in bufs])    # full mirror copy
+    emit("rs_repair", "encode_partner", round(group_mb / t_partner, 1),
+         "MB/s", k=k, payload_mb=group_mb, tolerates=1)
+    t_xor = best(lambda: xor_ops.parity_of_buffers(bufs))
+    emit("rs_repair", "encode_xor", round(group_mb / t_xor, 1),
+         "MB/s", k=k, payload_mb=group_mb, tolerates=1)
+    for m in (1, 2):
+        t_rs = best(lambda m=m: rs_ops.encode_parity(bufs, m))
+        emit("rs_repair", f"encode_rs_m{m}", round(group_mb / t_rs, 1),
+             "MB/s", k=k, payload_mb=group_mb, tolerates=m)
+
+    # -- rebuild: one lost member -------------------------------------------
+    xor_parity = xor_ops.parity_of_buffers(bufs)
+    rs1 = rs_ops.encode_parity(bufs, 1)
+    rs2 = rs_ops.encode_parity(bufs, 2)
+    survivors = [b for i, b in enumerate(bufs) if i != 3]
+    t = best(lambda: bytes(bufs[3]))                      # partner copy-back
+    emit("rs_repair", "rebuild1_partner", round(t, 5), "s", lost=1)
+    t = best(lambda: xor_ops.reconstruct_member(xor_parity, survivors,
+                                                nbytes))
+    emit("rs_repair", "rebuild1_xor", round(t, 5), "s", lost=1)
+    present1 = {i: b for i, b in enumerate(bufs) if i != 3}
+    t = best(lambda: rs_ops.decode_lost(k, 1, present1, {0: rs1[0]}, sizes))
+    emit("rs_repair", "rebuild1_rs_m1", round(t, 5), "s", lost=1)
+
+    # -- rebuild: two lost members (RS m=2 territory) ------------------------
+    present2 = {i: b for i, b in enumerate(bufs) if i not in (2, 5)}
+    t = best(lambda: rs_ops.decode_lost(
+        k, 2, present2, {0: rs2[0], 1: rs2[1]}, sizes))
+    emit("rs_repair", "rebuild2_rs_m2", round(t, 5), "s", lost=2)
+    out = rs_ops.decode_lost(k, 2, present2, {0: rs2[0], 1: rs2[1]}, sizes)
+    ok = all(out[i] == bufs[i].tobytes() for i in (2, 5))
+    emit("rs_repair", "rebuild2_bit_identical", int(ok), "bool", lost=2)
+
+
 def main(full: bool = False) -> None:
     sizes = [8, 16, 32, 64, 128] + ([256, 512] if full else [])
     fig5(sizes)
     fig6(16, [1, 2, 4, 8])
     table3(sizes[-1])
     mem_restore(n_layers=256 if full else 128)
+    rs_repair(full)
+
+
+_SCENARIOS = {
+    "fig5": lambda full: fig5([8, 16, 32] + ([64, 128] if full else [])),
+    "fig6": lambda full: fig6(16, [1, 2, 4, 8]),
+    "table3": lambda full: table3(128 if full else 32),
+    "mem_restore": lambda full: mem_restore(
+        n_layers=256 if full else 128),
+    "rs_repair": rs_repair,
+    "all": main,
+}
 
 
 if __name__ == "__main__":
-    main()
+    from benchmarks.common import run_scenarios
+
+    run_scenarios(_SCENARIOS, main)

@@ -40,6 +40,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slower)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="dump every emitted record as a JSON artifact")
     args = ap.parse_args()
     header()
     failed = 0
@@ -53,6 +55,10 @@ def main() -> None:
             failed += 1
             emit("harness", f"{name}_status", "FAILED", "")
             traceback.print_exc()
+    if args.json:
+        from benchmarks.common import dump_json
+
+        dump_json(args.json)
     sys.exit(1 if failed else 0)
 
 

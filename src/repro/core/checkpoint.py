@@ -87,6 +87,7 @@ class Checkpoint:
         # chain exists; ``clock`` is injectable for deterministic tests
         self._clock = clock
         self._policy = None
+        self._scrubber = None
         self._decision_cache = None   # (iteration, version, Decision)
         # Per-tier-slot delta state: the chunk manifests of the last version
         # written to (or restored from) that tier, diffed against at the next
@@ -109,6 +110,7 @@ class Checkpoint:
             "restore_tier": None,     # label of the tier the last read used
             "preempt_flushes": 0,     # CRAFT_CP_SIGNAL-triggered sync flushes
             "final_writes": 0,        # walltime-guard final full checkpoints
+            "read_repairs": 0,        # restores saved by repair-on-read
         }
 
     # ------------------------------------------------------------------ add
@@ -187,6 +189,11 @@ class Checkpoint:
         )
         if self.env.cp_signal:
             self._policy.install_signal_handlers()
+        from repro.core.scrubber import Scrubber
+
+        # always built: repair-on-read works even when background scrubbing
+        # (CRAFT_SCRUB_EVERY) is off — the policy gates the idle slices
+        self._scrubber = Scrubber(self)
 
     # ----------------------------------------------------- nested (subCP())
     def sub_cp(self, child: "Checkpoint") -> None:
@@ -273,6 +280,13 @@ class Checkpoint:
         return self._policy
 
     @property
+    def scrubber(self):
+        """The :class:`~repro.core.scrubber.Scrubber` guarding this
+        checkpoint's tiers (``None`` before commit()/when disabled).  Call
+        ``scrubber.scan_once()`` for a synchronous full integrity pass."""
+        return self._scrubber
+
+    @property
     def should_stop(self) -> bool:
         """The application should exit its loop: a preemption flush landed
         or the walltime guard wrote its final checkpoint."""
@@ -305,6 +319,10 @@ class Checkpoint:
         # does not advance) — recompute those instead of pinning the cache
         if d.write or iteration is not None:
             self._decision_cache = (iteration, self._version, d)
+        if not d.write and self._scrubber is not None:
+            # skipped steps are the scrubber's idle windows (throttled by
+            # CRAFT_SCRUB_EVERY / CRAFT_SCRUB_BYTES_PER_S via the policy)
+            self._scrubber.opportunity()
         return d
 
     def _update_all(self) -> None:
@@ -534,54 +552,67 @@ class Checkpoint:
         )
         errors = []
         for store, slot, label in self._chained_stores():
-            try:
-                # may trigger replica / partner / XOR recovery; an
-                # unrecoverable tier falls through to the next one (the
-                # base-class materialize is a plain local-dir check)
-                vdir = store.materialize(version)
-            except CheckpointError as exc:
-                errors.append(f"{label}: {exc}")
-                continue
-            if vdir is None or not Path(vdir).is_dir():
-                errors.append(f"{label}: version v-{version} not present")
-                continue
-            missing = self._manifest_missing(store, Path(vdir), version)
-            if missing:
-                errors.append(
-                    f"{label}: v-{version} incomplete, missing {missing[:3]}"
-                )
-                continue
-            # Delta chain: every base version the v2 refs resolve through
-            # must be materialized on this same tier before reading; a hole
-            # in the chain fails this tier explicitly (no decode crash).
-            try:
-                base_dirs = self._materialize_chain(store, Path(vdir), version)
-            except CheckpointError as exc:
-                errors.append(f"{label}: v-{version} {exc}")
-                continue
-            overrides = dict(store.read_ctx_overrides(version))
-            overrides.setdefault("rel_root", Path(vdir))
-            if base_dirs:
-                overrides.setdefault("base_dirs", base_dirs)
-            ctx = dataclasses.replace(base_ctx, **overrides)
-            try:
-                # independent items restore in parallel (chunk digest checks
-                # and decompression fan out across the same pool underneath)
-                storage.run_jobs(
-                    [
-                        lambda key=key, item=item: item.read(Path(vdir) / key, ctx)
-                        for key, item in self._map.items()
-                    ],
-                    ctx,
-                )
-                self.stats["restore_tier"] = label
-                self._prime_delta_state(version, restored_slot=slot)
-                return
-            except CheckpointError as exc:
-                errors.append(f"{label}: {exc}")
+            for attempt in (0, 1):
+                err = self._read_from_store(
+                    store, slot, label, version, base_ctx)
+                if err is None:
+                    return
+                # Repair-on-read: a failed verification hands the tier to
+                # the scrubber (redundancy rebuild / peer-tier re-encode /
+                # quarantine) and the read retries once — a restore never
+                # falls through while a same-tier repair is possible.
+                if attempt == 0 and self._scrubber is not None \
+                        and self._scrubber.repair_version(store, slot, version):
+                    self.stats["read_repairs"] += 1
+                    continue
+                errors.append(err)
+                break
         raise CheckpointError(
             f"could not restore {self.name!r} v-{version}: " + "; ".join(errors)
         )
+
+    def _read_from_store(self, store, slot, label, version, base_ctx):
+        """One tier's restore attempt; returns None on success, else the
+        error string to report (the caller may repair and retry once)."""
+        try:
+            # may trigger replica / partner / XOR / RS recovery; an
+            # unrecoverable tier falls through to the next one (the
+            # base-class materialize is a plain local-dir check)
+            vdir = store.materialize(version)
+        except CheckpointError as exc:
+            return f"{label}: {exc}"
+        if vdir is None or not Path(vdir).is_dir():
+            return f"{label}: version v-{version} not present"
+        missing = self._manifest_missing(store, Path(vdir), version)
+        if missing:
+            return f"{label}: v-{version} incomplete, missing {missing[:3]}"
+        # Delta chain: every base version the v2 refs resolve through
+        # must be materialized on this same tier before reading; a hole
+        # in the chain fails this tier explicitly (no decode crash).
+        try:
+            base_dirs = self._materialize_chain(store, Path(vdir), version)
+        except CheckpointError as exc:
+            return f"{label}: v-{version} {exc}"
+        overrides = dict(store.read_ctx_overrides(version))
+        overrides.setdefault("rel_root", Path(vdir))
+        if base_dirs:
+            overrides.setdefault("base_dirs", base_dirs)
+        ctx = dataclasses.replace(base_ctx, **overrides)
+        try:
+            # independent items restore in parallel (chunk digest checks
+            # and decompression fan out across the same pool underneath)
+            storage.run_jobs(
+                [
+                    lambda key=key, item=item: item.read(Path(vdir) / key, ctx)
+                    for key, item in self._map.items()
+                ],
+                ctx,
+            )
+        except CheckpointError as exc:
+            return f"{label}: {exc}"
+        self.stats["restore_tier"] = label
+        self._prime_delta_state(version, restored_slot=slot)
+        return None
 
     def _materialize_chain(self, store, vdir: Path, version: int) -> dict:
         """Materialize every delta-base version ``vdir`` depends on; returns

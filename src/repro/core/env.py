@@ -49,8 +49,13 @@ class CraftEnv:
                                      # NO-REUSE (default) | REUSE
     # --- TPU-era extensions (documented in DESIGN.md §2) ------------------
     node_cp_path: Optional[Path]     # CRAFT_NODE_CP_PATH   (node-tier dir)
-    node_redundancy: str             # CRAFT_NODE_REDUNDANCY: LOCAL|PARTNER|XOR
-    xor_group_size: int              # CRAFT_XOR_GROUP_SIZE (default: 8)
+    node_redundancy: str             # CRAFT_NODE_REDUNDANCY:
+                                     # LOCAL|PARTNER|XOR|RS
+    xor_group_size: int              # CRAFT_XOR_GROUP_SIZE (default: 8;
+                                     # also the RS group size k)
+    rs_parity: int                   # CRAFT_RS_PARITY: parity buffers m per
+                                     # RS group — survives any m simultaneous
+                                     # member losses (default: 2)
     pfs_every: int                   # CRAFT_PFS_EVERY: every k-th version also
                                      # lands on the PFS tier (default: 1)
     keep_versions: int               # CRAFT_KEEP_VERSIONS (default: 2)
@@ -97,6 +102,16 @@ class CraftEnv:
                                      # "SIGTERM,SIGUSR1") that trigger a
                                      # synchronous flush of the deepest tier
                                      # (batch-scheduler preemption notice)
+    # --- integrity scrubber (core/scrubber.py) -----------------------------
+    scrub_every: float               # CRAFT_SCRUB_EVERY: seconds between
+                                     # background scrub slices, run in idle
+                                     # checkpoint opportunities (0 = no
+                                     # background scrubbing; repair-on-read
+                                     # stays active)
+    scrub_bytes_per_s: float         # CRAFT_SCRUB_BYTES_PER_S: scrub IO
+                                     # throttle — bytes verified per second,
+                                     # accumulated between slices
+                                     # (0 = unthrottled)
 
     def tier_every_for(self, slot: str):
         """Cadence spec for a chain slot: int count, "auto", or None (legacy).
@@ -124,8 +139,11 @@ class CraftEnv:
             raise ValueError(f"CRAFT_COMM_SPAWN_POLICY={spawn!r}")
         node_path = env.get("CRAFT_NODE_CP_PATH")
         redundancy = env.get("CRAFT_NODE_REDUNDANCY", "PARTNER").upper()
-        if redundancy not in ("LOCAL", "PARTNER", "XOR"):
+        if redundancy not in ("LOCAL", "PARTNER", "XOR", "RS"):
             raise ValueError(f"CRAFT_NODE_REDUNDANCY={redundancy!r}")
+        rs_parity = int(env.get("CRAFT_RS_PARITY", "2"))
+        if rs_parity < 1:
+            raise ValueError(f"CRAFT_RS_PARITY={rs_parity!r}")
         compress = env.get("CRAFT_COMPRESS", "none").lower()
         if compress not in ("none", "zstd"):
             raise ValueError(f"CRAFT_COMPRESS={compress!r}")
@@ -177,6 +195,13 @@ class CraftEnv:
             raise ValueError(
                 f"CRAFT_WALLTIME_MARGIN_SECONDS={walltime_margin!r}")
         cp_signal = _parse_cp_signal(env.get("CRAFT_CP_SIGNAL", ""))
+        scrub_every = float(env.get("CRAFT_SCRUB_EVERY", "0"))
+        if scrub_every < 0:
+            raise ValueError(f"CRAFT_SCRUB_EVERY={scrub_every!r}")
+        scrub_bytes_per_s = float(env.get("CRAFT_SCRUB_BYTES_PER_S", "0"))
+        if scrub_bytes_per_s < 0:
+            raise ValueError(
+                f"CRAFT_SCRUB_BYTES_PER_S={scrub_bytes_per_s!r}")
         io_workers_raw = env.get("CRAFT_IO_WORKERS")
         if io_workers_raw is None:
             io_workers = min(4, os.cpu_count() or 1)
@@ -197,6 +222,7 @@ class CraftEnv:
             node_cp_path=Path(node_path) if node_path else None,
             node_redundancy=redundancy,
             xor_group_size=int(env.get("CRAFT_XOR_GROUP_SIZE", "8")),
+            rs_parity=rs_parity,
             pfs_every=int(env.get("CRAFT_PFS_EVERY", "1")),
             keep_versions=int(env.get("CRAFT_KEEP_VERSIONS", "2")),
             compress=compress,
@@ -215,6 +241,8 @@ class CraftEnv:
             walltime_seconds=walltime_seconds,
             walltime_margin_seconds=walltime_margin,
             cp_signal=cp_signal,
+            scrub_every=scrub_every,
+            scrub_bytes_per_s=scrub_bytes_per_s,
         )
 
 

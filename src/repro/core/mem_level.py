@@ -238,6 +238,59 @@ class MemFabric:
                 if versions is None or key[1] in versions
             )
 
+    # -- scrub support (core/scrubber.py) -----------------------------------
+    def entries(self, name: str) -> List[Tuple[int, int, str, "_MemEntry"]]:
+        """Snapshot of every distinct resident entry: [(owner, version, rel,
+        entry)].  Replicas alias the owner's ``_MemVersion`` object in this
+        threads-as-ranks fabric, so each (owner, version, rel) appears once.
+        """
+        seen = {}
+        with self._lock:
+            for slot in self.slots.get(name, {}).values():
+                for (owner, version), mv in slot.items():
+                    for rel, entry in mv.files.items():
+                        seen.setdefault((owner, version, rel), entry)
+        return [(o, v, r, e) for (o, v, r), e in sorted(seen.items(),
+                                                        key=lambda kv: kv[0])]
+
+    def replace_entry(self, name: str, owner: int, version: int, rel: str,
+                      entry: "_MemEntry") -> None:
+        """Swap in a repaired entry for every holder of (owner, version)."""
+        with self._lock:
+            for slot in self.slots.get(name, {}).values():
+                mv = slot.get((owner, version))
+                if mv is not None and rel in mv.files:
+                    mv.files[rel] = entry
+                    mv.nbytes = sum(e.nbytes for e in mv.files.values())
+
+    def drop_version(self, name: str, version: int) -> None:
+        """Retract an unrepairable version so it is never served again."""
+        with self._lock:
+            for slot in self.slots.get(name, {}).values():
+                for key in [k for k in slot if k[1] == version]:
+                    del slot[key]
+            self.worlds.get(name, {}).pop(version, None)
+
+    def corrupt_entry(self, name: str, owner: int, version: int,
+                      rel: Optional[str] = None) -> str:
+        """Test hook: silently rot one stored payload (its recorded digest is
+        kept, so the rot is detectable).  Returns the corrupted rel path."""
+        mv, _ = self.lookup(name, owner, version)
+        if mv is None:
+            raise KeyError(f"no resident shards for owner {owner} v-{version}")
+        rel = rel if rel is not None else sorted(mv.files)[0]
+        entry = mv.files[rel]
+        if entry.array is not None:
+            rotted = entry.array.copy()
+            rotted.view(np.uint8).reshape(-1)[0] ^= 0x40
+            bad = _MemEntry(rotted, None, entry.digest)
+        else:
+            blob = bytearray(entry.blob)
+            blob[0] ^= 0x40
+            bad = _MemEntry(None, bytes(blob), entry.digest)
+        self.replace_entry(name, owner, version, rel, bad)
+        return rel
+
     # -- fault injection / lifecycle ----------------------------------------
     def drop_rank(self, rank: int) -> None:
         """Model the fail-stop RAM loss of ``rank`` across every checkpoint."""
@@ -501,6 +554,19 @@ class MemStore(StorageTier):
         # path would cost exactly the codec pass this tier exists to skip
         return {"array_cache": self._caches.get(version, {}),
                 "checksum": "none"}
+
+    def retained_versions(self) -> List[int]:
+        """Completely resident fabric versions (the scrubber's walk list)."""
+        return sorted(
+            v for v in self.fabric.versions(self.name)
+            if self.fabric.complete(self.name, v)
+        )
+
+    def forget_version(self, version: int) -> None:
+        """Retract an unrepairable version from the fabric (scrub quarantine
+        — restore then falls through to the disk tiers)."""
+        self.fabric.drop_version(self.name, version)
+        self._caches.pop(version, None)
 
     def invalidate_all(self) -> None:
         self.fabric.wipe(self.name)

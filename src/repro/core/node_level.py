@@ -21,6 +21,11 @@ Redundancy policies (``CRAFT_NODE_REDUNDANCY``):
     (rotating with the version number, RAID-5 style) stores the XOR parity
     of every member's payload; any single lost member is rebuilt from the
     parity + survivors (SCR's partner-XOR level).
+  * ``RS``      — the same groups protected by an RS(k, m) erasure code
+    (``CRAFT_RS_PARITY`` parity buffers, rotating placement): any ``m``
+    simultaneously lost members rebuild bit-identically, and the parity
+    manifest's per-member/per-row kernel digests let the background
+    scrubber verify and repair rot (:mod:`repro.core.erasure`).
 
 Restore goes through :meth:`NodeStore.materialize`, which transparently
 rebuilds a missing local version from the partner mirror or the parity group
@@ -40,10 +45,9 @@ import shutil
 from pathlib import Path
 from typing import Dict, List, Optional
 
-from repro.core import storage, tiers
+from repro.core import erasure, storage, tiers
 from repro.core.cpbase import CheckpointError
 from repro.core.tiers import StorageTier
-from repro.kernels.checksum import ops as checksum_ops
 from repro.kernels.xor_parity import ops as xor_ops
 
 
@@ -121,6 +125,8 @@ class NodeStore(StorageTier):
                 self._publish_partner(version)
             elif self.redundancy == "XOR":
                 self._publish_xor(version)
+            elif self.redundancy == "RS":
+                erasure.publish_rs(self, version)
         self.comm.barrier()          # redundancy data in place
 
     def _publish_partner(self, version: int) -> None:
@@ -141,21 +147,9 @@ class NodeStore(StorageTier):
         payloads: Dict[int, bytes] = {}
         manifest: Dict[str, dict] = {}
         for member in group:
-            vdir = self._member_version_dir(member, version)
-            files = sorted(p for p in vdir.rglob("*") if p.is_file())
-            blob = bytearray()
-            entries = []
-            for p in files:
-                data = p.read_bytes()
-                entries.append({"rel": str(p.relative_to(vdir)), "size": len(data)})
-                blob += data
-            payloads[member] = bytes(blob)
-            s1, s2 = checksum_ops.digest_bytes(payloads[member])
-            manifest[str(member)] = {
-                "files": entries,
-                "size": len(blob),
-                "digest": [int(s1), int(s2)],
-            }
+            # same payload/manifest-entry definition as the RS path
+            payloads[member], manifest[str(member)] = erasure.collect_member(
+                self, member, version)
         parity = xor_ops.parity_of_buffers([payloads[m] for m in group])
         root = self._parity_root(self.nid, version)
         tmp = root / tiers.staging_dir_name(version)
@@ -185,6 +179,8 @@ class NodeStore(StorageTier):
                 for v, p in tiers.list_version_dirs(root):
                     if (p / "manifest.json").exists():
                         best = max(best, v)
+        elif self.redundancy == "RS":
+            best = max(best, erasure.latest_rs_version(self))
         return best
 
     def version_dir(self, version: int) -> Path:
@@ -200,6 +196,8 @@ class NodeStore(StorageTier):
                 return self._recover_partner(version)
             if self.redundancy == "XOR":
                 return self._recover_xor(version)
+            if self.redundancy == "RS":
+                return erasure.recover_rs(self, version)
         except (OSError, CheckpointError, json.JSONDecodeError) as exc:
             raise CheckpointError(
                 f"node-tier recovery of {self.name} v-{version} failed: {exc}"
@@ -232,23 +230,17 @@ class NodeStore(StorageTier):
         for member in group:
             if member == self.nid:
                 continue
-            vdir = self._member_version_dir(member, version)
-            blob = bytearray()
-            for ent in manifest[str(member)]["files"]:
-                blob += (vdir / ent["rel"]).read_bytes()
-            ment = manifest[str(member)]
-            if len(blob) != ment["size"]:
+            # shared stale-survivor definition (erasure.read_member_payload):
+            # XOR can rebuild exactly one member, so an unreadable/stale
+            # survivor is fatal here, not merely "also lost" as under RS
+            payload = erasure.read_member_payload(
+                self, member, version, manifest[str(member)])
+            if payload is None:
                 raise CheckpointError(
-                    f"survivor node {member} payload size mismatch"
+                    f"survivor node {member} payload unreadable, short or "
+                    "digest-mismatched (stale or corrupt survivor data)"
                 )
-            if "digest" in ment:
-                s1, s2 = checksum_ops.digest_bytes(bytes(blob))
-                if [int(s1), int(s2)] != list(ment["digest"]):
-                    raise CheckpointError(
-                        f"survivor node {member} payload digest mismatch "
-                        "(stale or corrupt survivor data)"
-                    )
-            survivors.append(bytes(blob))
+            survivors.append(payload)
         parity = (pdir / "parity.bin").read_bytes()
         mine = xor_ops.reconstruct_member(parity, survivors, my_entry["size"])
         dst = self._local.version_dir(version)
@@ -272,3 +264,23 @@ class NodeStore(StorageTier):
                     self._node_dir(holder) / f"xor-group-{g0}" / self.name,
                     ignore_errors=True,
                 )
+        elif self.redundancy == "RS":
+            erasure.invalidate_rs(self)
+
+    # -- scrub hooks (core/scrubber.py) ---------------------------------------
+    def forget_version(self, version: int) -> None:
+        """Quarantine helper: drop the *local* copy of ``version`` so the
+        next materialize() rebuilds it from the redundancy peers."""
+        self._local.forget_version(version)
+
+    def scrub_redundancy(self, version: int) -> dict:
+        """Verify (and repair) this version's redundancy side-trees.
+
+        RS parity shards carry manifest digests and are re-encoded in place
+        when rotted (``erasure.scrub_rs``); the PARTNER mirror and XOR
+        parity have no self-digest to check here — their staleness is
+        caught at rebuild time against the member digests instead.
+        """
+        if self.redundancy == "RS":
+            return erasure.scrub_rs(self, version)
+        return {"bytes": 0, "checked": 0, "repaired": 0, "unrepairable": 0}

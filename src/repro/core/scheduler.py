@@ -169,10 +169,15 @@ class CheckpointPolicy:
         self._seen_epoch = recovery_epoch()
         self._installed: list = []            # [(signum, previous handler)]
         self._cadence = self._resolve_cadence()
+        # integrity scrubbing rides idle checkpoint opportunities: the first
+        # slice is only due a full CRAFT_SCRUB_EVERY after policy creation,
+        # so startup (restore, first writes) is never competing with scrub IO
+        self._last_scrub_t = now
         self.stats = {
             "decisions": 0, "writes": 0, "skips": 0,
             "preempt_flushes": 0, "final_writes": 0,
             "backpressure_stretches": 0, "recovery_resets": 0,
+            "scrub_slices": 0,
         }
 
     # ------------------------------------------------------------- cadences
@@ -282,6 +287,25 @@ class CheckpointPolicy:
 
     def _on_signal(self, signum, frame) -> None:   # signal-safe: sets a flag
         self._preempt.set()
+
+    # ------------------------------------------------------------ scrubbing
+    def scrub_due(self) -> bool:
+        """Should an integrity-scrub slice run now?  True only in an idle
+        window: ``CRAFT_SCRUB_EVERY`` elapsed since the last slice, no
+        preemption pending, and the async writer queue drained (scrub IO
+        must never stretch a checkpoint landing)."""
+        if self.env.scrub_every <= 0:
+            return False
+        if self._preempt.is_set() or self._final_written:
+            return False
+        if self._backpressure() > 0:
+            return False
+        return self._clock() - self._last_scrub_t >= self.env.scrub_every
+
+    def note_scrub(self) -> None:
+        """A scrub slice was scheduled — restart the scrub interval clock."""
+        self._last_scrub_t = self._clock()
+        self.stats["scrub_slices"] += 1
 
     # ------------------------------------------------------------- recovery
     def _maybe_reset_on_recovery(self) -> None:

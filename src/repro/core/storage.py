@@ -749,6 +749,20 @@ class VersionStore(StorageTier):
     def version_dir(self, version: int) -> Path:
         return self.root / tiers.version_dir_name(version)
 
+    def forget_version(self, version: int) -> None:
+        """Quarantine one unrepairable version: drop its directory and its
+        metadata entries so ``latest_version`` / restore agreement fall back
+        to an older intact version instead of re-reading rot (the scrubber's
+        last resort when no repair source exists)."""
+        shutil.rmtree(self.root / tiers.version_dir_name(version),
+                      ignore_errors=True)
+        meta = self.meta()
+        versions = [v for v in meta.get("versions", []) if v != version]
+        meta["versions"] = versions
+        if meta.get("latest") == version:
+            meta["latest"] = max(versions, default=0)
+        write_json(self.root / "meta.json", meta)
+
     # -- invalidation (nested checkpoints, paper §2.5) -----------------------
     def invalidate_all(self) -> None:
         meta = self.meta()

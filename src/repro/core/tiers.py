@@ -226,6 +226,21 @@ class StorageTier(abc.ABC):
         vdir = self.version_dir(version)
         return vdir if vdir.is_dir() else None
 
+    def retained_versions(self) -> List[int]:
+        """Versions locally resident on this tier — the scrubber's walk list.
+
+        The default scans the directory tree ``version_dir`` points into;
+        the RAM tier overrides this with its fabric's version set.
+        """
+        return [v for v, _ in list_version_dirs(self.version_dir(0).parent)]
+
+    def forget_version(self, version: int) -> None:
+        """Quarantine one version this tier can no longer serve faithfully
+        (scrubber last resort: corrupt with no repair source).  The default
+        just drops the directory; stores with version metadata override to
+        also retract the version from their manifests."""
+        shutil.rmtree(self.version_dir(version), ignore_errors=True)
+
     # -- per-tier write-cost reporting ---------------------------------------
     def record_write(self, seconds: float, nbytes: int = 0) -> None:
         """Feed one observed version-write duration into this tier's cost

@@ -1,6 +1,9 @@
 """Pallas TPU kernels for the compute hot-spots CRAFT-JAX optimizes:
 
 * ``xor_parity`` — SCR partner-XOR parity encode/reconstruct (node tier),
+* ``rs_erasure`` — GF(2^8) Reed–Solomon matmul: RS(k, m) erasure encode /
+  syndrome / solve for the node tier's multi-loss redundancy (XOR is its
+  m=1 row),
 * ``checksum``   — blocked Fletcher-like integrity digest (device-side),
 * ``flash_attention`` — blocked attention for the LM backbones.
 

@@ -1,0 +1,6 @@
+from repro.kernels.rs_erasure.ops import (  # noqa: F401
+    decode_lost,
+    encode_parity,
+    gf_matmul,
+    rs_matrix,
+)

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: GF(2^8) Reed–Solomon matmul (erasure encode/decode).
+
+The node tier's RS redundancy (``CRAFT_NODE_REDUNDANCY=RS``) multiplies a
+static byte matrix with a group of stacked payload buffers over GF(2^8)
+(poly 0x11B): encode applies the (m, k) parity matrix, decode applies a
+syndrome matrix and then the inverted erasure submatrix — all three are one
+``out[r] = XOR_i matrix[r][i] · stacked[i]`` primitive.
+
+TPU mapping.  The textbook log/exp-table product is a gather per byte —
+the one operation the VPU is worst at.  Because the matrix entries are
+*static* (the coding matrix is fixed at trace time), each constant multiply
+is instead unrolled into its xtime chain: ``c·x = XOR_{b: bit b of c}
+xtime^b(x)`` where ``xtime`` is the field's multiply-by-2.  On bytes packed
+four-per-uint32 lane, xtime is three VPU ops (SWAR: shift masked to stop
+cross-byte bleed, conditional 0x1B reduction selected by the high bit), so
+a constant multiply costs ≤ 7·3 + 7 bitwise ops and the whole (R, G) matmul
+is a static unroll of pure VPU work — no tables, no gathers, no MXU.
+
+Like ``xor_parity`` (the m=1 special case of this kernel, where the parity
+row is all ones and every term degenerates to a plain XOR), the group
+dimension is small and the payload huge, so the grid tiles N into
+VMEM-resident ``(G, block_n)`` uint32 blocks; ``block_n`` multiples of 128
+match the (8, 128) int32 VREG tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xtime_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Field multiply-by-2 of bytes packed 4-per-uint32 lane (SWAR).
+
+    The left shift is masked with 0xFEFEFEFE so bit 7 of one byte never
+    bleeds into bit 0 of the next; the 0x1B reduction is added exactly to
+    the bytes whose high bit was set (their 0/1 mask times 0x1B stays
+    inside its own byte, so the uint32 multiply is carry-free).
+    """
+    hi = jnp.right_shift(x, 7) & jnp.uint32(0x01010101)
+    return (jnp.left_shift(x, 1) & jnp.uint32(0xFEFEFEFE)) ^ (hi * jnp.uint32(0x1B))
+
+
+def _gf_mul_const(c: int, x: jnp.ndarray) -> jnp.ndarray:
+    """``c · x`` in GF(2^8) for a static constant c, bytes packed in uint32."""
+    if c == 0:
+        return jnp.zeros_like(x)
+    acc = None
+    term = x
+    bits = c
+    while bits:
+        if bits & 1:
+            acc = term if acc is None else acc ^ term
+        bits >>= 1
+        if bits:
+            term = _xtime_u32(term)
+    return acc
+
+
+def _gf_matmul_kernel(stacked_ref, out_ref, *, matrix):
+    """Apply the static (R, G) byte matrix to the (G, block_n) uint32 tile."""
+    tile = stacked_ref[...]
+    rows = []
+    for r in range(len(matrix)):
+        acc = None
+        for i, c in enumerate(matrix[r]):
+            if c == 0:
+                continue
+            term = (tile[i:i + 1] if c == 1
+                    else _gf_mul_const(c, tile[i:i + 1]))
+            acc = term if acc is None else acc ^ term
+        if acc is None:                       # all-zero matrix row
+            acc = jnp.zeros_like(tile[0:1])
+        rows.append(acc)
+    out_ref[...] = jnp.concatenate(rows, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("matrix", "block_n", "interpret"))
+def gf_matmul(
+    stacked: jnp.ndarray, *, matrix, block_n: int = 16384,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """GF(2^8) product of a static byte matrix with ``(G, N) uint32`` buffers.
+
+    ``matrix`` must be a hashable nested tuple of ints shaped (R, G) with
+    entries in 0..255 (it is traced away into the unrolled kernel body).
+    N must be a multiple of ``block_n`` (callers pad); ``block_n`` a multiple
+    of 128.  Returns ``(R, N) uint32`` — bytes of ``XOR_i matrix[r][i] ·
+    member_i`` packed exactly like the input.
+    """
+    if stacked.ndim != 2:
+        raise ValueError(f"expected (G, N), got {stacked.shape}")
+    if stacked.dtype != jnp.uint32:
+        raise TypeError(f"expected uint32, got {stacked.dtype}")
+    g, n = stacked.shape
+    mat = tuple(tuple(int(c) for c in row) for row in matrix)
+    if not mat or any(len(row) != g for row in mat):
+        raise ValueError(f"matrix shape does not match G={g}")
+    if any(not 0 <= c <= 255 for row in mat for c in row):
+        raise ValueError("matrix entries must be GF(2^8) bytes (0..255)")
+    if block_n % 128:
+        raise ValueError(f"block_n={block_n} must be a multiple of 128")
+    if n % block_n:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    r = len(mat)
+    grid = (n // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_gf_matmul_kernel, matrix=mat),
+        grid=grid,
+        in_specs=[pl.BlockSpec((g, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((r, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.uint32),
+        interpret=interpret,
+    )(stacked)
+    return out

@@ -1,0 +1,196 @@
+"""Public ops for Reed–Solomon erasure coding: matrices, encode, decode.
+
+The node tier groups k peers and stores m parity buffers (``CRAFT_RS_PARITY``)
+so that **any** m simultaneously lost members are recoverable — the
+generalization of the XOR tier's single-loss parity (``m=1`` here *is* XOR:
+the coding matrix's first row is all ones).
+
+Coding matrix.  ``rs_matrix(k, m)`` is a column-normalized Cauchy matrix
+over GF(2^8): ``C[j][i] = 1 / (x_j ^ y_i)`` with distinct evaluation points,
+columns scaled so row 0 is all ones.  Every square submatrix of a Cauchy
+matrix is nonsingular, and row/column scaling preserves that, so the
+systematic code [I; G] is MDS: any k of the k+m symbols reconstruct the
+data, i.e. up to m erasures are always solvable.
+
+Buffers are u32-lane padded exactly like the XOR ops (shared ``_pad_to_u32``
+/ ``padded_len``); the heavy byte math dispatches to the Pallas kernel on
+TPU and the jitted log/exp-table reference on CPU.  The tiny (≤ m×m) matrix
+inversion of the erasure solve runs on the host.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rs_erasure.kernel import gf_matmul as gf_matmul_pallas
+from repro.kernels.rs_erasure.ref import GF_EXP, GF_LOG, gf_matmul_ref
+from repro.kernels.xor_parity.ops import _pad_to_u32, padded_len
+
+
+# --------------------------------------------------------------------------
+# host-side GF(2^8) scalar/matrix algebra (tiny, numpy)
+# --------------------------------------------------------------------------
+def gf_mul(a: int, b: int) -> int:
+    if a == 0 or b == 0:
+        return 0
+    return int(GF_EXP[int(GF_LOG[a]) + int(GF_LOG[b])])
+
+
+def gf_inv(a: int) -> int:
+    if a == 0:
+        raise ZeroDivisionError("inverse of 0 in GF(2^8)")
+    return int(GF_EXP[255 - int(GF_LOG[a])])
+
+
+def rs_matrix(k: int, m: int) -> np.ndarray:
+    """The (m, k) parity matrix: column-normalized Cauchy, row 0 all ones."""
+    if k < 1 or m < 1:
+        raise ValueError(f"need k >= 1 and m >= 1, got k={k} m={m}")
+    if k + m > 256:
+        raise ValueError(f"k + m must be <= 256 in GF(2^8), got {k + m}")
+    ys = list(range(k))                   # data points: 0 .. k-1
+    xs = [255 - j for j in range(m)]      # parity points: 255 .. 256-m
+    cauchy = [[gf_inv(x ^ y) for y in ys] for x in xs]
+    col_inv = [gf_inv(cauchy[0][i]) for i in range(k)]
+    return np.array(
+        [[gf_mul(cauchy[j][i], col_inv[i]) for i in range(k)]
+         for j in range(m)],
+        dtype=np.uint8,
+    )
+
+
+def gf_mat_inv(mat: np.ndarray) -> np.ndarray:
+    """Invert a small GF(2^8) matrix (Gauss–Jordan; raises if singular)."""
+    a = np.array(mat, dtype=np.uint8)
+    n = a.shape[0]
+    if a.shape != (n, n):
+        raise ValueError(f"square matrix required, got {a.shape}")
+    aug = np.concatenate([a, np.eye(n, dtype=np.uint8)], axis=1)
+    for col in range(n):
+        pivot = next((r for r in range(col, n) if aug[r, col]), None)
+        if pivot is None:
+            raise ValueError("singular matrix over GF(2^8)")
+        if pivot != col:
+            aug[[col, pivot]] = aug[[pivot, col]]
+        inv = gf_inv(int(aug[col, col]))
+        aug[col] = [gf_mul(inv, int(v)) for v in aug[col]]
+        for r in range(n):
+            if r != col and aug[r, col]:
+                f = int(aug[r, col])
+                aug[r] = [int(aug[r, c]) ^ gf_mul(f, int(aug[col, c]))
+                          for c in range(2 * n)]
+    return aug[:, n:]
+
+
+# --------------------------------------------------------------------------
+# bulk byte math: backend dispatch
+# --------------------------------------------------------------------------
+def gf_matmul(stacked_u32: np.ndarray, matrix, *,
+              use_pallas: Optional[bool] = None) -> np.ndarray:
+    """Apply a byte matrix to u32-packed buffers; returns (R, W) uint32.
+
+    Pallas kernel on TPU (static-matrix xtime chains), jitted log/exp-table
+    reference elsewhere — bit-identical by construction (and by test).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    mat = tuple(tuple(int(c) for c in row) for row in matrix)
+    if use_pallas:
+        n = stacked_u32.shape[1]
+        block = 16384 if n % 16384 == 0 else 128
+        out = gf_matmul_pallas(jnp.asarray(stacked_u32), matrix=mat,
+                               block_n=block)
+        return np.asarray(out)
+    stacked_u8 = np.ascontiguousarray(stacked_u32).view(np.uint8)
+    out = np.asarray(_gf_matmul_ref_jit(jnp.asarray(stacked_u8), mat))
+    return np.ascontiguousarray(out).view(np.uint32)
+
+
+@functools.partial(jax.jit, static_argnums=1)
+def _gf_matmul_ref_jit(stacked_u8, mat):
+    # one module-level wrapper so repeated calls with the same static matrix
+    # reuse the compiled executable instead of re-tracing
+    return gf_matmul_ref(stacked_u8, mat)
+
+
+# --------------------------------------------------------------------------
+# buffer-level encode / decode (what the node tier calls)
+# --------------------------------------------------------------------------
+def encode_parity(buffers: Sequence, m: int, *,
+                  use_pallas: Optional[bool] = None) -> List[bytes]:
+    """The m parity buffers of a k-member group (zero-padded to equal length).
+
+    Each parity buffer is ``padded_len(max member size)`` bytes; row 0 is the
+    plain XOR of the group (the m=1 code is the XOR tier's parity).
+    """
+    if not buffers:
+        raise ValueError("empty erasure group")
+    if m < 1:
+        raise ValueError(f"need at least one parity buffer, got m={m}")
+    sizes = [len(b) if isinstance(b, (bytes, bytearray)) else b.nbytes
+             for b in buffers]
+    n_pad = padded_len(max(sizes))
+    stacked = _pad_to_u32(buffers, n_pad)
+    parity = gf_matmul(stacked, rs_matrix(len(buffers), m),
+                       use_pallas=use_pallas)
+    return [np.ascontiguousarray(parity[j]).view(np.uint8).tobytes()
+            for j in range(m)]
+
+
+def decode_lost(
+    k: int,
+    m: int,
+    present: Dict[int, object],
+    parities: Dict[int, object],
+    sizes: Sequence[int],
+    *,
+    use_pallas: Optional[bool] = None,
+) -> Dict[int, bytes]:
+    """Rebuild the lost members of a group from survivors + parity buffers.
+
+    ``present`` maps surviving member positions (0..k-1) to their payloads,
+    ``parities`` maps available parity rows (0..m-1) to their buffers, and
+    ``sizes`` gives every member's true byte length (from the parity
+    manifest).  Any ``e = k - len(present)`` erasures are solvable as long
+    as ``len(parities) >= e``; returns {lost position: exact original bytes}.
+
+    Solve: with G the coding matrix, for each chosen parity row j the
+    syndrome ``S_j = P_j  XOR  Σ_{i surviving} G[j][i]·D_i`` equals
+    ``Σ_{i lost} G[j][i]·D_i``; the e×e submatrix of G over (chosen rows ×
+    lost columns) is nonsingular (MDS), so the lost members are its inverse
+    applied to the syndromes — three ``gf_matmul`` passes in total.
+    """
+    lost = sorted(set(range(k)) - set(present))
+    if not lost:
+        return {}
+    rows = sorted(parities)[: len(lost)]
+    if len(rows) < len(lost):
+        raise ValueError(
+            f"{len(lost)} members lost but only {len(parities)} parity "
+            f"buffers available (m={m})"
+        )
+    if len(sizes) != k:
+        raise ValueError(f"sizes must name all {k} members, got {len(sizes)}")
+    g_mat = rs_matrix(k, m)
+    n_pad = padded_len(max(sizes))
+    surv = sorted(present)
+    parity_stack = _pad_to_u32([parities[j] for j in rows], n_pad)
+    if surv:
+        surv_stack = _pad_to_u32([present[i] for i in surv], n_pad)
+        partial = gf_matmul(surv_stack, g_mat[np.ix_(rows, surv)],
+                            use_pallas=use_pallas)
+        syndromes = parity_stack ^ partial
+    else:
+        syndromes = parity_stack
+    a_inv = gf_mat_inv(g_mat[np.ix_(rows, lost)])
+    rebuilt = gf_matmul(syndromes, a_inv, use_pallas=use_pallas)
+    return {
+        pos: np.ascontiguousarray(rebuilt[t]).view(np.uint8)
+        .tobytes()[: sizes[pos]]
+        for t, pos in enumerate(lost)
+    }

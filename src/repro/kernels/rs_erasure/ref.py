@@ -1,0 +1,77 @@
+"""Pure-jnp oracle for the Reed–Solomon GF(2^8) matmul kernel.
+
+The erasure code works in GF(2^8) with the AES reduction polynomial
+``x^8 + x^4 + x^3 + x + 1`` (0x11B).  Addition is XOR; multiplication is
+implemented here the classic way — log/exp table lookups with generator 3
+(``a·b = exp[log a + log b]``, the exp table doubled so the index sum needs
+no mod-255) — which is exactly the form the systems literature calls a
+"log-table matmul".  The Pallas kernel computes the *same field product*
+without gathers (bit-decomposed xtime chains, see kernel.py); the two must
+agree bit for bit, which tests/test_rs_erasure.py asserts.
+
+Tables are built once at import with plain numpy and exposed both as numpy
+(host-side matrix algebra in ops.py) and as jnp constants (this oracle).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+_POLY = 0x11B      # AES field: x^8 + x^4 + x^3 + x + 1
+_GENERATOR = 3     # 2 is not primitive mod 0x11B; 3 is
+
+
+def _build_tables():
+    exp = np.zeros(510, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.uint8)   # log[0] is undefined (guarded)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        # multiply by the generator 3: x*2 ^ x, reduced by the field poly
+        x2 = x << 1
+        if x2 & 0x100:
+            x2 ^= _POLY
+        x = x2 ^ x
+    exp[255:] = exp[:255]                 # doubled: no mod on log sums
+    return exp, log
+
+
+GF_EXP, GF_LOG = _build_tables()
+_GF_EXP_J = jnp.asarray(GF_EXP)
+_GF_LOG_J = jnp.asarray(GF_LOG)
+
+
+def gf_matmul_ref(stacked: jnp.ndarray, matrix) -> jnp.ndarray:
+    """GF(2^8) matrix product of a static byte matrix with stacked buffers.
+
+    ``stacked`` is ``(G, N) uint8`` (one row per group member), ``matrix`` a
+    nested tuple/array of shape ``(R, G)`` with entries in 0..255.  Returns
+    ``(R, N) uint8`` where ``out[r] = XOR_i matrix[r][i] · stacked[i]`` —
+    Reed–Solomon encode, syndrome computation and erasure solve are all this
+    one primitive with different matrices.
+    """
+    if stacked.ndim != 2:
+        raise ValueError(f"expected (G, N), got {stacked.shape}")
+    if stacked.dtype != jnp.uint8:
+        raise TypeError(f"expected uint8, got {stacked.dtype}")
+    mat = np.asarray(matrix, dtype=np.uint8)
+    if mat.ndim != 2 or mat.shape[1] != stacked.shape[0]:
+        raise ValueError(f"matrix {mat.shape} does not match G={stacked.shape[0]}")
+    logs = _GF_LOG_J[stacked].astype(jnp.int32)        # (G, N)
+    rows = []
+    for r in range(mat.shape[0]):
+        acc = jnp.zeros(stacked.shape[1], dtype=jnp.uint8)
+        for i in range(mat.shape[1]):
+            c = int(mat[r, i])
+            if c == 0:
+                continue
+            if c == 1:
+                acc = acc ^ stacked[i]
+                continue
+            prod = _GF_EXP_J[int(GF_LOG[c]) + logs[i]]
+            prod = jnp.where(stacked[i] == 0, jnp.uint8(0), prod)
+            acc = acc ^ prod
+        rows.append(acc)
+    return jnp.stack(rows)

@@ -21,12 +21,29 @@ _LANE = 512  # pad byte payloads to 512 B = 128 uint32 lanes
 
 
 def _pad_to_u32(buffers: Sequence[np.ndarray], n_pad: int) -> np.ndarray:
-    """Stack uint8 buffers into a (G, n_pad/4) uint32 matrix, zero-padded."""
-    out = np.zeros((len(buffers), n_pad), dtype=np.uint8)
-    for i, b in enumerate(buffers):
-        arr = np.frombuffer(b, dtype=np.uint8) if isinstance(b, (bytes, bytearray)) else b
-        out[i, : arr.size] = arr
-    return out.view(np.uint32)
+    """Stack uint8 buffers into a (G, n_pad/4) uint32 matrix, zero-padded.
+
+    Buffers that already are exactly ``n_pad`` bytes (bytes-likes included —
+    ``np.frombuffer`` is zero-copy) are viewed, not staged through a padded
+    copy; only short or non-contiguous buffers pay for a zero-filled row.
+    A single full-size buffer therefore stacks with no host copy at all.
+    Shared with the RS erasure ops (``kernels/rs_erasure``), whose payloads
+    go through the same u32-lane padding.
+    """
+    rows = []
+    for b in buffers:
+        if isinstance(b, (bytes, bytearray, memoryview)):
+            arr = np.frombuffer(b, dtype=np.uint8)
+        else:
+            arr = np.ascontiguousarray(b).reshape(-1).view(np.uint8)
+        if arr.size != n_pad:
+            row = np.zeros(n_pad, dtype=np.uint8)
+            row[: arr.size] = arr
+            arr = row
+        rows.append(arr.view(np.uint32))
+    if len(rows) == 1:
+        return rows[0].reshape(1, -1)
+    return np.stack(rows)
 
 
 def padded_len(nbytes: int) -> int:

@@ -121,6 +121,53 @@ def test_xor_two_losses_in_group_fail_over_to_pfs(tmp_path):
     assert np.all(arr == 0.0)
 
 
+def test_partner_double_bad_falls_through_to_pfs(tmp_path):
+    """Local copy AND partner mirror both digest-mismatched: materialize's
+    candidates are all rotten, so the restore must come from the PFS tier —
+    stale bytes are never served."""
+    from repro.core.scrubber import corrupt_file
+
+    env = CraftEnv.capture({
+        "CRAFT_CP_PATH": str(tmp_path / "pfs"),
+        "CRAFT_NODE_CP_PATH": str(tmp_path / "node"),
+        "CRAFT_NODE_REDUNDANCY": "PARTNER",
+        "CRAFT_PFS_EVERY": "1",            # a PFS copy exists as the outer tier
+    })
+    for rank in range(4):
+        cp = Checkpoint("st", FakeComm(rank, 4), env=env)
+        cp.add("arr", np.full((32,), 30.0))
+        cp.commit()
+        cp.update_and_write()
+    corrupt_file(tmp_path / "node" / "node-2" / "st" / "v-1"
+                 / "arr" / "array.bin")
+    corrupt_file(tmp_path / "node" / "node-3" / "mirror-of-2" / "st"
+                 / "v-1" / "arr" / "array.bin")
+    arr = read_rank(tmp_path, "PARTNER", 2, 4)
+    assert np.all(arr == 30.0)
+
+
+def test_partner_double_bad_raises_without_pfs(tmp_path):
+    """Same double-bad state with no deeper tier: the restore must raise
+    CheckpointError (and leave the target untouched), never serve the stale
+    digest-mismatched bytes."""
+    from repro.core.cpbase import CheckpointError
+    from repro.core.scrubber import corrupt_file
+
+    write_all_ranks(tmp_path, "PARTNER", 4, lambda r: float(10 * (r + 1)))
+    corrupt_file(tmp_path / "node" / "node-2" / "st" / "v-1"
+                 / "arr" / "array.bin")
+    corrupt_file(tmp_path / "node" / "node-3" / "mirror-of-2" / "st"
+                 / "v-1" / "arr" / "array.bin")
+    env = _env(tmp_path, "PARTNER")
+    arr = np.zeros((32,))
+    cp = Checkpoint("st", FakeComm(2, 4), env=env)
+    cp.add("arr", arr)
+    cp.commit()
+    with pytest.raises(CheckpointError):
+        cp.restart_if_needed()
+    assert np.all(arr == 0.0)
+
+
 def test_disable_node_level(tmp_path):
     env = _env(tmp_path, "PARTNER")
     cp = Checkpoint("nolocal", FakeComm(0, 2), env=env)
