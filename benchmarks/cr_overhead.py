@@ -69,6 +69,10 @@ def _codec_write(base: Path, label: str, arrays, versions: int, envmap) -> float
     cp.commit()
     best = float("inf")
     try:
+        # untimed warmup version: the first write pays the digest/codec jit
+        # compilation, which would otherwise pollute the measured best
+        cp.update_and_write()
+        cp.wait()
         for _ in range(versions):
             t0 = time.perf_counter()
             cp.update_and_write()
@@ -207,6 +211,137 @@ def delta_write(full: bool = False) -> None:
         shutil.rmtree(base, ignore_errors=True)
 
 
+def device_snapshot(full: bool = False) -> None:
+    """Host write path vs the fused device-resident snapshot pipeline
+    (``CRAFT_DEVICE_SNAPSHOT=1``) on a delta-checkpointed jax-array state.
+
+    The host path transfers every shard in full and re-digests it on the
+    host; the device path computes digest + dirty mask + entropy in one
+    fused pass over the device-resident bytes and only moves the dirty
+    chunks.  Reported per dirty fraction: effective write throughput
+    (logical payload / best commit), the speedup, and the D2H byte
+    reduction of the staged pipeline.
+
+    Interpreting the numbers by backend: on an accelerator the host path
+    pays a full-payload D2H copy every version, and the speedup should
+    track the D2H reduction rows until IO dominates.  On the CPU backend
+    both paths read the array in place (``device_get`` of a CPU jax array
+    is zero-copy), so there is no transfer to eliminate and the device
+    path dispatches to an equivalent-cost numpy digest pass — expect
+    throughput parity (~1.0-1.1x, the residual win is the skipped
+    write-path digest bookkeeping); the d2h_reduction rows then carry the
+    accelerator-relevant signal.  With zstandard installed the entropy
+    gate also spares the device path per-chunk compression attempts on
+    incompressible payloads like this one.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import Box
+
+    rng = np.random.default_rng(11)
+    n_arrays = 8
+    mb = 24 if full else 16
+    chunk_bytes = 256 * 1024
+    versions = 6 if full else 5
+    n_chunks = mb * 1024 * 1024 // chunk_bytes
+    total_mb = n_arrays * mb
+
+    def run(label: str, base: Path, dirty_frac: float, device_on: bool):
+        boxes = {
+            f"a{i}": Box(jnp.asarray(
+                rng.standard_normal((mb * 1024 * 1024 // 4,))
+                .astype(np.float32)))
+            for i in range(n_arrays)
+        }
+        env = CraftEnv.capture({
+            "CRAFT_CP_PATH": str(base),
+            "CRAFT_USE_SCR": "0",
+            "CRAFT_KEEP_VERSIONS": str(versions + 4),
+            "CRAFT_CHUNK_BYTES": str(chunk_bytes),
+            "CRAFT_DELTA": "1",
+            "CRAFT_DEVICE_SNAPSHOT": "1" if device_on else "0",
+        })
+        cp = Checkpoint(f"dsnap_{label}", env=env)
+        for k, b in boxes.items():
+            cp.add(k, b)
+        cp.commit()
+        n_dirty = max(1, int(round(dirty_frac * n_chunks)))
+        offs = jnp.asarray([
+            (c * n_chunks // n_dirty) * chunk_bytes // 4
+            for c in range(n_dirty)
+        ])
+        best_s = float("inf")
+        try:
+            cp.update_and_write()      # v1 full write + jit warmup, untimed
+            cp.wait()
+            for _ in range(versions):
+                for b in boxes.values():    # touch n_dirty chunks on device
+                    b.value = b.value.at[offs].add(1.0)
+                    b.value.block_until_ready()
+                t0 = time.perf_counter()
+                cp.update_and_write()
+                cp.wait()
+                best_s = min(best_s, time.perf_counter() - t0)
+        finally:
+            cp.close()
+        return best_s
+
+    # Checkpoint onto tmpfs when available: the scenario compares the two
+    # snapshot/digest pipelines, and on a disk-backed tmpdir fsync jitter
+    # (hundreds of ms on overlay filesystems) swamps the tens-of-ms signal.
+    shm = Path("/dev/shm")
+    base = Path(tempfile.mkdtemp(
+        prefix="craft-dsnap-", dir=str(shm) if shm.is_dir() else None))
+    try:
+        for frac in (0.02, 0.10, 0.50):
+            tag = f"{int(frac * 100)}pct"
+            host_s = run(f"host_{tag}", base / f"host_{tag}", frac, False)
+            dev_s = run(f"dev_{tag}", base / f"dev_{tag}", frac, True)
+            emit("device_snapshot", f"host_write_{tag}",
+                 round(total_mb / host_s, 1), "MB/s", dirty_pct=100 * frac,
+                 payload_mb=total_mb)
+            emit("device_snapshot", f"device_write_{tag}",
+                 round(total_mb / dev_s, 1), "MB/s", dirty_pct=100 * frac,
+                 payload_mb=total_mb)
+            emit("device_snapshot", f"speedup_{tag}",
+                 round(host_s / max(1e-9, dev_s), 2), "x",
+                 dirty_pct=100 * frac)
+
+        # D2H accounting.  On CPU both paths already read the array in
+        # place (zero-copy), so the throughput rows above compare digest
+        # pipelines at parity; the transfer-level win appears where a
+        # PCIe/ICI link sits between the array and the writer.  That win is
+        # decided by the dirty mask alone, so it can be accounted exactly on
+        # any backend: the host path moves the full payload every version,
+        # the staged pipeline gathers only dirty chunk rows.
+        from repro.core.device_snapshot import DeviceSnapshotter
+
+        snap = DeviceSnapshotter(chunk_bytes, with_hist=False, staged=True)
+        arr = jnp.asarray(
+            rng.standard_normal((mb * 1024 * 1024 // 4,))
+            .astype(np.float32))
+        snap.snapshot("a", arr)             # first snapshot: full transfer
+        for frac in (0.02, 0.10):
+            tag = f"{int(frac * 100)}pct"
+            n_dirty = max(1, int(round(frac * n_chunks)))
+            offs = jnp.asarray([
+                (c * n_chunks // n_dirty) * chunk_bytes // 4
+                for c in range(n_dirty)
+            ])
+            d2h = 0
+            for _ in range(versions):
+                arr = arr.at[offs].add(1.0)
+                _, meta = snap.snapshot("a", arr)
+                d2h += sum(meta["dirty"]) * chunk_bytes
+            host_b = versions * mb * 1024 * 1024
+            emit("device_snapshot", f"d2h_reduction_{tag}",
+                 round(host_b / max(1, d2h), 1), "x", dirty_pct=100 * frac,
+                 host_mb=versions * mb,
+                 device_mb=round(d2h / 2**20, 2))
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
 def main(full: bool = False) -> None:
     codec_throughput(full)
     # checkpoint payload = 2 Lanczos vectors (nx·ny·2 fp32) ≈ 17 MB at 1024²
@@ -257,6 +392,7 @@ def _schedule_overhead(full: bool = False) -> None:
 _SCENARIOS = {
     "codec_throughput": codec_throughput,
     "delta_write": delta_write,
+    "device_snapshot": device_snapshot,
     "schedule_overhead": _schedule_overhead,
     "table4": main,
 }

@@ -82,11 +82,42 @@ def checksum(full: bool) -> None:
         emit("kernel_checksum", f"digest_{nbytes}B", round(t, 1), "us")
 
 
+def snapshot(full: bool) -> None:
+    """Fused per-chunk snapshot metadata (digest + dirty + histogram) vs the
+    plain per-chunk digest pass, and the numpy CPU-backend twin."""
+    from repro.kernels.snapshot import ops as snap_ops
+
+    chunk_bytes = 256 * 1024
+    for nbytes in ([1 << 24] + ([1 << 27] if full else [])):
+        rng = np.random.default_rng(0)
+        raw = rng.integers(0, 2 ** 32, nbytes // 4, dtype=np.uint32)
+        n_chunks = nbytes // chunk_bytes
+        words2 = jnp.asarray(raw.reshape(n_chunks, chunk_bytes // 4))
+        prev = jnp.zeros((n_chunks, 2), jnp.uint32)
+        for with_hist in (False, True):
+            t = _time(lambda w, p, h=with_hist: snap_ops.snapshot_chunks(
+                w, p, with_hist=h, use_pallas=False), words2, prev)
+            tag = "hist" if with_hist else "nohist"
+            emit("kernel_snapshot", f"fused_{tag}_{nbytes}B",
+                 round(t, 1), "us")
+            gbps = nbytes / (t / 1e6) / 1e9
+            emit("kernel_snapshot", f"fused_{tag}_{nbytes}B_bw",
+                 round(gbps, 2), "GB/s")
+        host_bytes = raw.view(np.uint8)
+        prev_np = np.zeros((n_chunks, 2), np.uint32)
+        t = _time(lambda b, p: snap_ops.snapshot_host(b, chunk_bytes, p),
+                  host_bytes, prev_np)
+        emit("kernel_snapshot", f"host_np_{nbytes}B", round(t, 1), "us")
+        emit("kernel_snapshot", f"host_np_{nbytes}B_bw",
+             round(nbytes / (t / 1e6) / 1e9, 2), "GB/s")
+
+
 def main(full: bool = False) -> None:
     flash(full)
     xor(full)
     rs_erasure(full)
     checksum(full)
+    snapshot(full)
 
 
 if __name__ == "__main__":

@@ -125,6 +125,15 @@ class Checkpoint:
             raise ValueError(f"checkpoint key must be a valid file name: {key!r}")
         if key in self._map:
             raise CheckpointError(f"duplicate checkpoint key {key!r}")
+        # Device-resident snapshot path (CRAFT_DEVICE_SNAPSHOT): jax-backed
+        # checkpointables get a fused on-device digest/dirty/entropy pass at
+        # update() time, keyed to the same chunk grid the codec writes.
+        kw.setdefault("device_snapshot", self.env.device_snapshot)
+        kw.setdefault("chunk_bytes", self.env.chunk_bytes)
+        # The entropy histogram only feeds the zstd gate — skip the extra
+        # device work entirely when no write can consult it.
+        kw.setdefault("device_hist", self.env.compress == "zstd"
+                      and self.env.zstd_gate_bits > 0)
         self._map[key] = checkpointables.wrap(obj, **kw)
 
     # --------------------------------------------------------------- commit
@@ -421,6 +430,9 @@ class Checkpoint:
                 delta_base=delta_state["version"] if delta_state else 0,
                 chunks_db=chunks_db if delta_on else None,
                 io_stats=io_stats,
+                zstd_level=self.env.zstd_level,
+                zstd_gate_bits=self.env.zstd_gate_bits,
+                device_meta={} if self.env.device_snapshot else None,
             )
             overrides = store.write_ctx_overrides()
             if overrides:

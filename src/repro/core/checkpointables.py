@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
 from repro.core import storage
+from repro.core.device_snapshot import DeviceSnapshotter
 
 T = TypeVar("T")
 
@@ -169,22 +170,41 @@ class JaxArrayCp(CpBase):
     (elastic restore).
     """
 
-    def __init__(self, box: Box):
+    def __init__(self, box: Box, *, device_snapshot: bool = False,
+                 chunk_bytes: Optional[int] = None,
+                 device_hist: bool = True):
         if not isinstance(box, Box):
             raise TypeError("JaxArrayCp expects a Box holding a jax.Array")
         self.box = box
-        self._buf: list = []     # [(index, np.ndarray)]
+        self._buf: list = []     # [(index, np.ndarray, device_meta | None)]
         self._meta: dict = {}
+        self._snap = (
+            DeviceSnapshotter(chunk_bytes or IOContext.chunk_bytes,
+                              with_hist=device_hist)
+            if device_snapshot else None
+        )
         self.update()
 
     def update(self) -> None:
         arr = self.box.value
         if not isinstance(arr, jax.Array):
             raise CheckpointError(f"Box no longer holds a jax.Array: {type(arr)}")
-        # Device→host snapshot of every addressable shard.
-        self._buf = [
-            (s.index, np.asarray(s.data)) for s in arr.addressable_shards
-        ]
+        shards = arr.addressable_shards
+        if self._snap is not None:
+            # Fused device pass per shard: digest + dirty mask + entropy on
+            # device, then only the dirty chunks cross to the host mirror.
+            self._buf = []
+            for i, s in enumerate(shards):
+                host, dmeta = self._snap.snapshot(i, s.data)
+                self._buf.append((s.index, host, dmeta))
+        else:
+            # Device→host snapshot of every addressable shard — one batched
+            # transfer instead of a blocking per-shard np.asarray.
+            hosts = jax.device_get([s.data for s in shards])
+            self._buf = [
+                (s.index, np.asarray(h), None)
+                for s, h in zip(shards, hosts)
+            ]
         self._meta = {
             "global_shape": list(arr.shape),
             "dtype": storage._dtype_to_name(arr.dtype),
@@ -192,8 +212,11 @@ class JaxArrayCp(CpBase):
 
     def write(self, dir_path: Path, ctx: IOContext) -> None:
         shards_meta = []
-        for i, (index, host) in enumerate(self._buf):
+        for i, (index, host, dmeta) in enumerate(self._buf):
             fname = f"shard-{ctx.proc_rank}-{i}.bin"
+            if dmeta is not None:
+                ctx.record_device_meta(
+                    storage._manifest_name(dir_path / fname, ctx), dmeta)
             storage.write_array(dir_path / fname, host, ctx)
             shards_meta.append({"file": fname, "index": _shard_slices(index)})
         storage.write_json(
@@ -236,7 +259,7 @@ class JaxArrayCp(CpBase):
             self.box.value = jnp.asarray(out)
 
     def nbytes(self) -> int:
-        return sum(h.nbytes for _, h in self._buf)
+        return sum(h.nbytes for _, h, _ in self._buf)
 
 
 # --------------------------------------------------------------------------
@@ -252,33 +275,48 @@ class PytreeCp(CpBase):
     reshards transparently.
     """
 
-    def __init__(self, box: Box):
+    def __init__(self, box: Box, *, device_snapshot: bool = False,
+                 chunk_bytes: Optional[int] = None,
+                 device_hist: bool = True):
         self.box = box
         self._buf: list = []
         self._treedef = None
+        self._snap = (
+            DeviceSnapshotter(chunk_bytes or IOContext.chunk_bytes,
+                              with_hist=device_hist)
+            if device_snapshot else None
+        )
         self.update()
 
     def update(self) -> None:
         leaves, treedef = jax.tree_util.tree_flatten(self.box.value)
         self._treedef = treedef
         buf = []
-        for leaf in leaves:
+        jax_shards = []      # (buf_item, shard) pairs for one batched D2H
+        for i, leaf in enumerate(leaves):
             if isinstance(leaf, jax.Array):
-                buf.append(
-                    {
-                        "kind": "jax",
-                        "global_shape": list(leaf.shape),
-                        "dtype": storage._dtype_to_name(leaf.dtype),
-                        "shards": [
-                            (s.index, np.asarray(s.data))
-                            for s in leaf.addressable_shards
-                        ],
-                    }
-                )
+                item = {
+                    "kind": "jax",
+                    "global_shape": list(leaf.shape),
+                    "dtype": storage._dtype_to_name(leaf.dtype),
+                    "shards": [],
+                }
+                for j, s in enumerate(leaf.addressable_shards):
+                    if self._snap is not None:
+                        host, dmeta = self._snap.snapshot((i, j), s.data)
+                        item["shards"].append((s.index, host, dmeta))
+                    else:
+                        jax_shards.append((item, s))
+                buf.append(item)
             elif isinstance(leaf, np.ndarray):
                 buf.append({"kind": "np", "data": leaf.copy()})
             else:
                 buf.append({"kind": "pod", "data": leaf})
+        if jax_shards:
+            # One batched device→host transfer for every jax leaf's shards.
+            hosts = jax.device_get([s.data for _, s in jax_shards])
+            for (item, s), h in zip(jax_shards, hosts):
+                item["shards"].append((s.index, np.asarray(h), None))
         self._buf = buf
 
     def write(self, dir_path: Path, ctx: IOContext) -> None:
@@ -286,8 +324,12 @@ class PytreeCp(CpBase):
         for i, item in enumerate(self._buf):
             if item["kind"] == "jax":
                 shards_meta = []
-                for j, (index, host) in enumerate(item["shards"]):
+                for j, (index, host, dmeta) in enumerate(item["shards"]):
                     fname = f"leaf{i}-shard-{ctx.proc_rank}-{j}.bin"
+                    if dmeta is not None:
+                        ctx.record_device_meta(
+                            storage._manifest_name(dir_path / fname, ctx),
+                            dmeta)
                     storage.write_array(dir_path / fname, host, ctx)
                     shards_meta.append(
                         {"file": fname, "index": _shard_slices(index)}
@@ -356,7 +398,7 @@ class PytreeCp(CpBase):
         total = 0
         for item in self._buf:
             if item["kind"] == "jax":
-                total += sum(h.nbytes for _, h in item["shards"])
+                total += sum(h.nbytes for _, h, _ in item["shards"])
             elif item["kind"] == "np":
                 total += item["data"].nbytes
         return total
@@ -441,11 +483,16 @@ def wrap(obj: Any, **kw) -> CpBase:
             return factory(obj)
     if isinstance(obj, Box):
         v = obj.value
+        snap_kw = {
+            "device_snapshot": kw.get("device_snapshot", False),
+            "chunk_bytes": kw.get("chunk_bytes"),
+            "device_hist": kw.get("device_hist", True),
+        }
         if isinstance(v, jax.Array):
-            return JaxArrayCp(obj)
+            return JaxArrayCp(obj, **snap_kw)
         if isinstance(v, _POD_TYPES):
             return PodCp(obj)
-        return PytreeCp(obj)
+        return PytreeCp(obj, **snap_kw)
     if isinstance(obj, np.ndarray):
         return NdArrayCp(obj, to_cp_col=kw.get("to_cp_col"))
     if isinstance(obj, jax.Array):

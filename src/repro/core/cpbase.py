@@ -78,6 +78,21 @@ class IOContext:
     # written, filled by the codec (delta savings show up here, while
     # ``Checkpoint.stats['bytes_written']`` stays the logical payload size).
     io_stats: Optional[dict] = None
+    # --- zstd tuning (CRAFT_ZSTD_LEVEL / CRAFT_ZSTD_GATE_BITS) --------------
+    # Compression level for the per-worker compressor cache, and the
+    # per-chunk compressibility gate: a chunk whose order-0 nibble-entropy
+    # estimate is >= ``zstd_gate_bits`` bits/byte is stored raw (chunk meta
+    # ``"enc": "raw"``) instead of run through zstd.  0 disables the gate.
+    zstd_level: int = 3
+    zstd_gate_bits: float = 0.0
+    # --- device-resident snapshot path (CRAFT_DEVICE_SNAPSHOT) --------------
+    # Precomputed chunk metadata, keyed like ``checksum_db`` (manifest name):
+    # {"nbytes", "chunk_bytes", "rdigests", "dirty", "entropy_bits"} produced
+    # by the fused snapshot kernel at ``update()`` time.  The array writers
+    # consume these instead of re-digesting on the host, after validating
+    # that the chunk grid matches (a tier override of ``chunk_bytes`` or a
+    # reshaped array falls back to the host path transparently).
+    device_meta: Optional[dict] = None
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
     )
@@ -86,6 +101,31 @@ class IOContext:
         if self.checksum_db is not None:
             with self._lock:
                 self.checksum_db[rel_name] = digest
+
+    def record_device_meta(self, rel_name: str, meta: dict) -> None:
+        """Attach device-produced chunk metadata for the file about to be
+        written under ``rel_name`` (called by checkpointables just before
+        ``storage.write_array``; same-thread, the lock guards cross-item
+        fanout writes into the shared dict)."""
+        if self.device_meta is not None:
+            with self._lock:
+                self.device_meta[rel_name] = meta
+
+    def lookup_device_meta(self, rel_name: str, nbytes: int,
+                           chunk_bytes: int, n_chunks: int) -> Optional[dict]:
+        """Device metadata for ``rel_name`` iff its chunk grid matches the
+        write about to happen — otherwise None (host fallback)."""
+        if self.device_meta is None:
+            return None
+        with self._lock:
+            meta = self.device_meta.get(rel_name)
+        if meta is None:
+            return None
+        if (int(meta.get("nbytes", -1)) != int(nbytes)
+                or int(meta.get("chunk_bytes", -1)) != int(chunk_bytes)
+                or len(meta.get("rdigests", ())) != int(n_chunks)):
+            return None
+        return meta
 
     def record_chunks(self, rel_name: str, manifest: dict) -> None:
         """Collect one file's chunk manifest for the next version's diff."""

@@ -60,6 +60,15 @@ class CraftEnv:
                                      # lands on the PFS tier (default: 1)
     keep_versions: int               # CRAFT_KEEP_VERSIONS (default: 2)
     compress: str                    # CRAFT_COMPRESS: none|zstd (default none)
+    zstd_level: int                  # CRAFT_ZSTD_LEVEL: zstd compression level
+                                     # (default 3; compressors are built once
+                                     # per IO worker, not once per chunk)
+    zstd_gate_bits: float            # CRAFT_ZSTD_GATE_BITS: per-chunk
+                                     # compressibility gate — chunks whose
+                                     # order-0 nibble-entropy estimate is >=
+                                     # this many bits/byte are stored raw
+                                     # instead of zstd-compressed (default
+                                     # 7.95; 0 disables the gate)
     checksum: str                    # CRAFT_CHECKSUM: crc32|fletcher|none
                                      # (default crc32; v1 files always store
                                      # the kernel fletcher digest when on)
@@ -73,6 +82,12 @@ class CraftEnv:
     delta_max_chain: int             # CRAFT_DELTA_MAX_CHAIN: max versions in
                                      # a delta chain before a full rewrite
                                      # (compaction; default 4)
+    device_snapshot: bool            # CRAFT_DEVICE_SNAPSHOT: fused on-device
+                                     # snapshot pipeline — per-chunk digests,
+                                     # dirty mask and compressibility gate are
+                                     # computed on the accelerator and only
+                                     # dirty chunks cross device→host
+                                     # (default off)
     # --- memory tier (docs/architecture.md §memory tier) -------------------
     tier_chain: tuple                # CRAFT_TIER_CHAIN: ordered subset of
                                      # mem,node,pfs (default "node,pfs";
@@ -147,6 +162,13 @@ class CraftEnv:
         compress = env.get("CRAFT_COMPRESS", "none").lower()
         if compress not in ("none", "zstd"):
             raise ValueError(f"CRAFT_COMPRESS={compress!r}")
+        zstd_level = int(env.get("CRAFT_ZSTD_LEVEL", "3"))
+        if not 1 <= zstd_level <= 22:
+            raise ValueError(f"CRAFT_ZSTD_LEVEL={zstd_level!r}: expected 1..22")
+        zstd_gate_bits = float(env.get("CRAFT_ZSTD_GATE_BITS", "7.95"))
+        if not 0 <= zstd_gate_bits <= 8:
+            raise ValueError(
+                f"CRAFT_ZSTD_GATE_BITS={zstd_gate_bits!r}: expected 0..8")
         checksum = env.get("CRAFT_CHECKSUM", "crc32").lower()
         if checksum not in ("crc32", "fletcher", "none"):
             raise ValueError(f"CRAFT_CHECKSUM={checksum!r}")
@@ -164,6 +186,7 @@ class CraftEnv:
         delta_max_chain = int(env.get("CRAFT_DELTA_MAX_CHAIN", "4"))
         if delta_max_chain < 1:
             raise ValueError(f"CRAFT_DELTA_MAX_CHAIN={delta_max_chain!r}")
+        device_snapshot = _bool(env, "CRAFT_DEVICE_SNAPSHOT", False)
         chunk_bytes = int(env.get("CRAFT_CHUNK_BYTES", str(4 * 1024 * 1024)))
         if chunk_bytes <= 0:
             raise ValueError(f"CRAFT_CHUNK_BYTES={chunk_bytes!r}")
@@ -226,12 +249,15 @@ class CraftEnv:
             pfs_every=int(env.get("CRAFT_PFS_EVERY", "1")),
             keep_versions=int(env.get("CRAFT_KEEP_VERSIONS", "2")),
             compress=compress,
+            zstd_level=zstd_level,
+            zstd_gate_bits=zstd_gate_bits,
             checksum=checksum,
             codec_version=codec_version,
             chunk_bytes=chunk_bytes,
             io_workers=io_workers,
             delta=delta,
             delta_max_chain=delta_max_chain,
+            device_snapshot=device_snapshot,
             tier_chain=tier_chain,
             mem_replicas=mem_replicas,
             mem_budget_bytes=mem_budget,

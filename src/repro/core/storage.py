@@ -51,6 +51,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
 import uuid
 import zlib
 from pathlib import Path
@@ -86,6 +87,53 @@ def _dtype_from_name(name: str) -> np.dtype:
         import ml_dtypes  # registered by jax; covers bfloat16 / fp8 etc.
 
         return np.dtype(getattr(ml_dtypes, name))
+
+
+# Per-worker (de)compressor reuse: constructing a ZstdCompressor per chunk
+# costs more than compressing a small chunk.  zstandard objects are not safe
+# for concurrent use, so the cache is thread-local (one instance per IO
+# worker per level); keying on id(_zstd) keeps the cache coherent when tests
+# swap the module in.
+_zstd_tls = threading.local()
+
+
+def _compressor(level: int):
+    cache = getattr(_zstd_tls, "cache", None)
+    if cache is None:
+        cache = _zstd_tls.cache = {}
+    key = ("c", id(_zstd), int(level))
+    c = cache.get(key)
+    if c is None:
+        c = cache[key] = _zstd.ZstdCompressor(level=int(level))
+    return c
+
+
+def _decompressor():
+    cache = getattr(_zstd_tls, "cache", None)
+    if cache is None:
+        cache = _zstd_tls.cache = {}
+    key = ("d", id(_zstd))
+    d = cache.get(key)
+    if d is None:
+        d = cache[key] = _zstd.ZstdDecompressor()
+    return d
+
+
+def _gate_allows_zstd(i: int, raw, ctx: IOContext, dm: Optional[dict]) -> bool:
+    """Per-chunk compressibility gate (CRAFT_ZSTD_GATE_BITS): skip the zstd
+    attempt when the chunk's order-0 entropy estimate says the bytes look
+    incompressible.  The estimate comes from the device snapshot's fused
+    histogram when available, else from a host nibble count — both are far
+    cheaper than a doomed compress pass."""
+    bits = float(ctx.zstd_gate_bits)
+    if bits <= 0:
+        return True
+    from repro.kernels.snapshot import ops as snapshot_ops
+
+    if dm is not None and dm.get("entropy_bits") is not None:
+        return float(dm["entropy_bits"][i]) < bits
+    hist = snapshot_ops.host_nibble_hist(raw)
+    return float(snapshot_ops.chunk_entropy_bits(hist[None])[0]) < bits
 
 
 def _digest_chunk(data) -> List[int]:
@@ -148,7 +196,7 @@ def _write_array_v0(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
     if ctx.compress == "zstd":
         if _zstd is None:  # pragma: no cover
             raise CheckpointError("CRAFT_COMPRESS=zstd but zstandard missing")
-        payload = _zstd.ZstdCompressor(level=3).compress(arr.tobytes())
+        payload = _compressor(ctx.zstd_level).compress(arr.tobytes())
     else:
         # uncompressed: digest + write straight off the byte view — tobytes()
         # would copy the whole payload for nothing
@@ -185,26 +233,39 @@ def _write_array_v1(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
         raise CheckpointError("CRAFT_COMPRESS=zstd but zstandard missing")
     want_digest = ctx.checksum != "none"
     n = flat.size
-    offsets = range(0, n, chunk_bytes) if n else range(0)
+    offsets = list(range(0, n, chunk_bytes)) if n else []
+    dm = ctx.lookup_device_meta(
+        _manifest_name(path, ctx), n, chunk_bytes, len(offsets))
 
-    # Uncompressed chunks are digested over their raw bytes, so the whole
+    # Uncompressed chunks are digested over their raw bytes: the device
+    # snapshot's fused digests serve directly when present, else the whole
     # array goes through one batched kernel dispatch; compressed chunks are
     # digested post-compression inside the fanout jobs.
-    raw_digests = (
-        _digest_all_chunks(flat, chunk_bytes)
-        if want_digest and compress != "zstd" and n else []
-    )
+    if want_digest and compress != "zstd" and n:
+        raw_digests = (dm["rdigests"] if dm is not None
+                       else _digest_all_chunks(flat, chunk_bytes))
+    else:
+        raw_digests = []
 
     def encode(i: int, off: int):
         raw = flat[off: off + chunk_bytes]
-        if compress == "zstd":
+        if compress == "zstd" and _gate_allows_zstd(i, raw, ctx, dm):
             # the compressor reads the buffer protocol directly — no
             # tobytes() copy of the uncompressed chunk
-            stored = _zstd.ZstdCompressor(level=3).compress(raw)
+            stored = _compressor(ctx.zstd_level).compress(raw)
             digest = _digest_chunk(stored) if want_digest else [0, 0]
+        elif compress == "zstd":
+            # gated: incompressible-looking chunk stored raw inside the
+            # zstd file; its stored-bytes digest is the raw digest
+            stored = memoryview(raw)
+            digest = ([int(d) for d in dm["rdigests"][i]] if dm is not None
+                      else _digest_chunk(raw)) if want_digest else [0, 0]
+            return stored, {"clen": len(stored), "ulen": int(raw.size),
+                            "digest": digest, "enc": "raw"}
         else:
             stored = memoryview(raw)
-            digest = raw_digests[i] if want_digest else [0, 0]
+            digest = ([int(d) for d in raw_digests[i]]
+                      if want_digest else [0, 0])
         return stored, {"clen": len(stored), "ulen": int(raw.size),
                         "digest": digest}
 
@@ -278,20 +339,30 @@ def _write_array_v2(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
         ):
             prev = cand
 
-    # Change-detection pass: digest every raw chunk in one batched kernel
-    # dispatch — this is the whole per-version cost of a clean chunk.
-    raw_digests = _digest_all_chunks(flat, chunk_bytes) if n else []
+    # Change-detection pass: the fused device snapshot already digested
+    # every chunk next to the data — consume those digests when the grid
+    # matches; otherwise digest every raw chunk in one batched kernel
+    # dispatch.  This is the whole per-version cost of a clean chunk.
+    dm = ctx.lookup_device_meta(rel, n, chunk_bytes, len(offsets))
+    raw_digests = (dm["rdigests"] if dm is not None
+                   else (_digest_all_chunks(flat, chunk_bytes) if n else []))
 
     def encode(i: int, off: int):
         raw = flat[off: off + chunk_bytes]
-        rdigest = list(raw_digests[i])
+        rdigest = [int(d) for d in raw_digests[i]]
         if prev is not None and list(prev["rdigests"][i]) == rdigest:
             # clean chunk: reference the base version instead of re-writing
             return None, {"ref": int(ctx.delta_base), "ulen": int(raw.size),
                           "rdigest": rdigest}
-        if compress == "zstd":
-            stored = _zstd.ZstdCompressor(level=3).compress(raw)
+        if compress == "zstd" and _gate_allows_zstd(i, raw, ctx, dm):
+            stored = _compressor(ctx.zstd_level).compress(raw)
             digest = _digest_chunk(stored)
+        elif compress == "zstd":
+            # gated raw chunk inside a zstd file: stored == raw bytes
+            stored = memoryview(raw)
+            return stored, {"clen": len(stored), "ulen": int(raw.size),
+                            "digest": rdigest, "rdigest": rdigest,
+                            "enc": "raw"}
         else:
             stored = memoryview(raw)
             digest = rdigest          # stored bytes == raw bytes
@@ -444,7 +515,7 @@ def _read_payload_v0(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray
         if _zstd is None:  # pragma: no cover
             raise CheckpointError("file is zstd-compressed but zstandard missing")
         try:
-            payload = _zstd.ZstdDecompressor().decompress(payload)
+            payload = _decompressor().decompress(payload)
         except _zstd.ZstdError as exc:
             raise CheckpointError(f"corrupt zstd payload in {path}: {exc}") from exc
     return _restore_shape(payload, header, path)
@@ -470,12 +541,12 @@ def _read_payload_v1(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray
         stored, meta = raw_chunks[i], header["chunks"][i]
         if verify and _digest_chunk(stored) != list(meta["digest"]):
             raise CheckpointError(f"checksum mismatch in {path} (chunk {i})")
-        if header["compress"] == "zstd":
+        if header["compress"] == "zstd" and meta.get("enc") != "raw":
             if _zstd is None:  # pragma: no cover
                 raise CheckpointError(
                     "file is zstd-compressed but zstandard missing")
             try:
-                stored = _zstd.ZstdDecompressor().decompress(stored)
+                stored = _decompressor().decompress(stored)
             except _zstd.ZstdError as exc:
                 raise CheckpointError(
                     f"corrupt zstd chunk {i} in {path}: {exc}"
@@ -498,13 +569,14 @@ def _read_payload_v1(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray
     return _restore_shape(out, header, path)
 
 
-def _decompress_chunk(stored: bytes, compress: str, path: Path, i: int) -> bytes:
-    if compress != "zstd":
+def _decompress_chunk(stored: bytes, compress: str, path: Path, i: int,
+                      meta: Optional[dict] = None) -> bytes:
+    if compress != "zstd" or (meta is not None and meta.get("enc") == "raw"):
         return stored
     if _zstd is None:  # pragma: no cover
         raise CheckpointError("file is zstd-compressed but zstandard missing")
     try:
-        return _zstd.ZstdDecompressor().decompress(stored)
+        return _decompressor().decompress(stored)
     except _zstd.ZstdError as exc:
         raise CheckpointError(f"corrupt zstd chunk {i} in {path}: {exc}") from exc
 
@@ -548,7 +620,7 @@ def _read_payload_v2(fh, header: dict, path: Path, ctx: IOContext) -> np.ndarray
         stored = raw_chunks[i]
         if verify and _digest_chunk(stored) != list(meta["digest"]):
             raise CheckpointError(f"checksum mismatch in {path} (chunk {i})")
-        out = _decompress_chunk(stored, header["compress"], path, i)
+        out = _decompress_chunk(stored, header["compress"], path, i, meta)
         if len(out) != meta["ulen"]:
             raise CheckpointError(
                 f"corrupt chunk {i} in {path}: inflated to {len(out)} "
@@ -634,7 +706,7 @@ def _resolve_ref_chunk(
         raise CheckpointError(
             f"checksum mismatch in delta base {bpath} (chunk {idx})")
     out = _decompress_chunk(stored, bheader.get("compress", "none"),
-                            bpath, idx)
+                            bpath, idx, bmeta)
     if len(out) != ulen:
         raise CheckpointError(
             f"corrupt delta base chunk {idx} in {bpath}: inflated to "
@@ -642,10 +714,12 @@ def _resolve_ref_chunk(
         )
     if verify:
         # bit-identity guard: the resolved raw bytes must match the digest
-        # the referring version recorded.  For an uncompressed base the
-        # stored digest already is the raw digest (metadata compare only).
+        # the referring version recorded.  For an uncompressed (or gated-
+        # raw) base chunk the stored digest already is the raw digest
+        # (metadata compare only).
         raw_dig = (list(bmeta["digest"])
                    if bheader.get("compress", "none") != "zstd"
+                   or bmeta.get("enc") == "raw"
                    else _digest_chunk(out))
         if raw_dig != list(rdigest):
             raise CheckpointError(

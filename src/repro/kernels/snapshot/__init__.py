@@ -1,0 +1,1 @@
+"""Fused snapshot kernel family: per-chunk digest + dirty mask + histogram."""

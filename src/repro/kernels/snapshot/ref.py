@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the fused snapshot pass (digest + dirty + histogram).
+
+One pass over a device-resident shard, viewed as a (n_chunks, words_per_chunk)
+uint32 matrix, produces per chunk (row):
+
+    s1      = sum_j x[j]                      (mod 2^32)
+    s2      = sum_j (j + 1) * x[j]            (mod 2^32)
+    dirty   = (s1 != prev_s1) | (s2 != prev_s2)
+    hist[k] = # of nibbles (both 4-bit halves of every byte) equal to k
+
+laid out as uint32 columns ``[s1, s2, dirty, hist[0..15]]`` (or just the
+first three with ``with_hist=False``).  The digest columns are bit-identical
+to the ``kernels.checksum`` digest of the same chunk's bytes — zero padding
+is digest-neutral, both sums ignore zero words — which is what lets the
+storage layer consume them in place of its host-side digest pass.  The
+histogram is kept as raw integer counts (the entropy estimate that gates
+zstd is derived on the host, see ``ops.chunk_entropy_bits``) so kernel and
+oracle compare exactly, with no float reduction-order hazards.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+HIST_BINS = 16
+META_COLS = 3 + HIST_BINS       # [s1, s2, dirty, hist[0..15]]
+
+
+def snapshot_ref(x2: jnp.ndarray, prev: jnp.ndarray, *,
+                 with_hist: bool = True) -> jnp.ndarray:
+    """Fused per-chunk metadata of a (n_chunks, wpc) uint32 matrix.
+
+    ``prev`` is the previous snapshot's (n_chunks, 2) digest table (zeros on
+    the first snapshot — callers ignore the dirty column then).  Returns a
+    (n_chunks, 19) uint32 matrix (or (n_chunks, 3) without the histogram).
+    """
+    if x2.ndim != 2 or x2.dtype != jnp.uint32:
+        raise TypeError(f"expected 2-D uint32, got {x2.shape} {x2.dtype}")
+    if prev.shape != (x2.shape[0], 2) or prev.dtype != jnp.uint32:
+        raise TypeError(
+            f"expected ({x2.shape[0]}, 2) uint32 prev digests, got "
+            f"{prev.shape} {prev.dtype}"
+        )
+    idx = jnp.arange(x2.shape[1], dtype=jnp.uint32)[None, :] + jnp.uint32(1)
+    s1 = jnp.sum(x2, axis=1, dtype=jnp.uint32)
+    s2 = jnp.sum(x2 * idx, axis=1, dtype=jnp.uint32)
+    dirty = ((s1 != prev[:, 0]) | (s2 != prev[:, 1])).astype(jnp.uint32)
+    cols = [s1, s2, dirty]
+    if with_hist:
+        nibs = [(x2 >> jnp.uint32(sh)) & jnp.uint32(0xF)
+                for sh in range(0, 32, 4)]
+        for k in range(HIST_BINS):
+            c = jnp.zeros_like(s1)
+            for nib in nibs:
+                c = c + jnp.sum((nib == jnp.uint32(k)).astype(jnp.uint32),
+                                axis=1, dtype=jnp.uint32)
+            cols.append(c)
+    return jnp.stack(cols, axis=1)
