@@ -252,8 +252,18 @@ def main(full: bool = False) -> None:
     rs_repair(full)
 
 
+def _spawn_merge_scenario(full: bool) -> None:
+    """Fig. 7 spawn+merge + replacement hydration, runnable from this
+    module's CLI too (lazy import: spawn_merge imports this module)."""
+    from benchmarks import spawn_merge
+
+    spawn_merge._SCENARIOS["fig7"](full)
+    spawn_merge._SCENARIOS["hydration"](full)
+
+
 _SCENARIOS = {
     "fig5": lambda full: fig5([8, 16, 32] + ([64, 128] if full else [])),
+    "spawn_merge": _spawn_merge_scenario,
     "fig6": lambda full: fig6(16, [1, 2, 4, 8]),
     "table3": lambda full: table3(128 if full else 32),
     "mem_restore": lambda full: mem_restore(

@@ -1,24 +1,197 @@
-"""Paper Fig. 7: spawn+merge cost vs communicator size.
+"""Paper Fig. 7: spawn+merge cost vs communicator size — plus the
+elastic-hydration profile of the spawned replacements.
 
 The paper benchmarks MPI_Comm_spawn + MPI_Intercomm_merge of 20 processes
 against communicators of growing size and finds ULFM-1.1 scales poorly.
-Our analog: kill k members of an n-member epoch and measure the
-spawn+merge phase of the non-shrinking recovery (replacement threads
-registering into the next epoch + the join barrier).
+Our analogs:
+
+fig7      — kill k members of an n-member epoch and measure the spawn+merge
+            phase of the non-shrinking recovery (replacement threads
+            registering into the next epoch + the join barrier), for k=1
+            and a multi-failure k, across growing n.
+hydration — the same spawn+merge with real checkpoint state on the memory
+            tier: after recovery the replacements restore their shard from
+            surviving peers' RAM-fabric replicas (zero PFS reads) and the
+            fabric reseeds the failed ranks' replica slots.  Reports the
+            replacement ``restart_if_needed()`` latency, the restore tier,
+            the physical bytes read, and the reseeded-slot count vs n
+            (docs/architecture.md §elastic restore).
+
+Scenario CLI (mirrors ``recovery_scaling.py``)::
+
+    PYTHONPATH=src:. python benchmarks/spawn_merge.py \
+        [fig7 hydration ...] [--full] [--json OUT.json]
 """
 from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
 
 from benchmarks.common import emit
 from benchmarks.recovery_scaling import _recover_once
 
 
-def main(full: bool = False) -> None:
-    sizes = [8, 16, 32, 64, 128] + ([256] if full else [])
+def _recover_k(n_procs: int, k: int, ppn: int = 2) -> dict:
+    """One NON-SHRINKING NO-REUSE recovery after killing ``k`` members;
+    returns the slowest member's recovery stats (incl. phase times)."""
+    from repro.core.comm import ProcFailedError, RevokedError
+    from repro.core.comm_sim import SimWorld
+    from repro.core.env import CraftEnv
+
+    env = CraftEnv.capture({
+        "CRAFT_COMM_RECOVERY_POLICY": "NON-SHRINKING",
+        "CRAFT_COMM_SPAWN_POLICY": "NO-REUSE",
+    })
+    world = SimWorld(n_procs, procs_per_node=ppn, spare_nodes=max(2, k),
+                     env=env)
+    victims = list(range(n_procs - k, n_procs))
+
+    def fn(comm):
+        recovered = {}
+        while True:
+            try:
+                if comm.rank == 0 and comm.epoch == 0:
+                    for v in victims:
+                        world.kill(v)
+                for _ in range(3):
+                    comm.barrier()
+                return recovered
+            except (ProcFailedError, RevokedError):
+                try:
+                    comm.revoke()
+                except Exception:
+                    pass
+                t0 = time.perf_counter()
+                comm = comm.recover(policy="NON-SHRINKING")
+                recovered = dict(comm.last_recovery_stats())
+                recovered["wall_s"] = time.perf_counter() - t0
+
+    out = world.run(fn, timeout=600)
+    stats = [v for v in out.values() if v]
+    stats.sort(key=lambda s: -s.get("wall_s", 0.0))
+    return stats[0] if stats else {}
+
+
+def fig7(sizes, multi_k: int = 4) -> None:
     for n in sizes:
         s = _recover_once(n, 2, "NON-SHRINKING", "NO-REUSE")
         emit("fig7_spawn_merge", "spawn_merge",
-             round(s.get("spawn_merge_s", float("nan")), 6), "s", procs=n)
+             round(s.get("spawn_merge_s", float("nan")), 6), "s",
+             procs=n, killed=1)
+        k = min(multi_k, max(1, n // 4))
+        s = _recover_k(n, k)
+        emit("fig7_spawn_merge", f"spawn_merge_k{k}",
+             round(s.get("spawn_merge_s", float("nan")), 6), "s",
+             procs=n, killed=k)
+
+
+def _hydrate_once(n: int, k: int, leaf_kb: int) -> dict:
+    """NON-SHRINKING recovery with live checkpoint state on the RAM tier:
+    measures the replacements' peer-memory restore after spawn+merge."""
+    from repro.core import Box, Checkpoint, ShardCp
+    from repro.core.aft import aft_zone
+    from repro.core.comm_sim import SimWorld
+    from repro.core.elastic import block_index
+    from repro.core.env import CraftEnv
+    from repro.core.mem_level import MemFabric
+
+    base = Path(tempfile.mkdtemp(prefix="craft-spawnmerge-"))
+    env = CraftEnv.capture({
+        "CRAFT_COMM_RECOVERY_POLICY": "NON-SHRINKING",
+        "CRAFT_CP_PATH": str(base / "pfs"),
+        "CRAFT_TIER_CHAIN": "mem,pfs",
+        "CRAFT_MEM_REPLICAS": str(min(2, n - 1)),
+        "CRAFT_MEM_SCRATCH": str(base / "shm"),
+        "CRAFT_USE_SCR": "0",
+        "CRAFT_IO_WORKERS": "1",
+    })
+    MemFabric.instance().reset()
+    world = SimWorld(n, spare_nodes=max(2, k), env=env)
+    src = np.arange(n * leaf_kb * 128, dtype=np.float64)  # leaf_kb KiB/rank
+    victims = list(range(n - k, n))
+    hydrated = {}   # replacement rank -> restore telemetry
+    reseeded = []
+
+    def body(comm):
+        cp = Checkpoint("hyd", comm, env=env)
+        it = Box(0)
+        idx = block_index(src.shape, comm.rank, comm.size)
+        w = Box(src[idx].copy())
+        cp.add("it", it)
+        cp.add("w", ShardCp(w, src.shape, idx))
+        cp.commit()
+        t0 = time.perf_counter()
+        restored = cp.restart_if_needed()
+        dt = time.perf_counter() - t0
+        if restored and comm.is_replacement():
+            hydrated[comm.rank] = {
+                "hydrate_s": dt,
+                "tier": cp.stats.get("restore_tier"),
+                "read_bytes": cp.stats.get("restore_read_bytes", 0),
+                "reseeded": cp.stats.get("mem_rehydrations", 0),
+            }
+        while it.value < 2:
+            it.value += 1
+            cp.update_and_write()
+            if comm.rank == 0 and comm.epoch == 0 and it.value == 1:
+                for v in victims:
+                    world.kill(v)
+            comm.barrier()
+        cp.close()
+        return True
+
+    def fn(c):
+        return aft_zone(
+            c, body, env=env,
+            on_recovery=lambda comm, stats: reseeded.append(
+                stats.get("mem_reseeded", 0)))
+
+    try:
+        world.run(fn, timeout=600)
+    finally:
+        MemFabric.instance().reset()
+        shutil.rmtree(base, ignore_errors=True)
+    times = sorted(v["hydrate_s"] for v in hydrated.values())
+    return {
+        "replacements": len(hydrated),
+        "hydrate_s": times[len(times) // 2] if times else float("nan"),
+        "tiers": sorted({v["tier"] for v in hydrated.values()}),
+        "read_bytes": sum(v["read_bytes"] for v in hydrated.values()),
+        "mem_reseeded": sum(reseeded),
+    }
+
+
+def hydration(sizes, k: int = 2, leaf_kb: int = 64) -> None:
+    for n in sizes:
+        s = _hydrate_once(n, min(k, n - 1), leaf_kb)
+        emit("fig7_hydration", "replacement_restore",
+             round(s["hydrate_s"], 6), "s",
+             procs=n, killed=min(k, n - 1), kb_per_rank=leaf_kb,
+             tier="+".join(s["tiers"]) or "none")
+        emit("fig7_hydration", "pfs_bytes_read", s["read_bytes"], "B",
+             procs=n, killed=min(k, n - 1))
+        emit("fig7_hydration", "mem_reseeded_slots", s["mem_reseeded"], "",
+             procs=n, killed=min(k, n - 1))
+
+
+def main(full: bool = False) -> None:
+    sizes = [8, 16, 32, 64, 128] + ([256] if full else [])
+    fig7(sizes)
+    hydration([4, 8, 16] + ([32] if full else []))
+
+
+_SCENARIOS = {
+    "fig7": lambda full: fig7([8, 16, 32] + ([64, 128] if full else [])),
+    "hydration": lambda full: hydration([4, 8] + ([16, 32] if full else [])),
+    "all": main,
+}
 
 
 if __name__ == "__main__":
-    main()
+    from benchmarks.common import run_scenarios
+
+    run_scenarios(_SCENARIOS, main)

@@ -12,7 +12,8 @@ Public surface:
 from repro.core.aft import AftAbortedError, AftZone, aft_zone
 from repro.core.checkpoint import Checkpoint
 from repro.core.checkpointables import (
-    Box, FuncCp, JaxArrayCp, NdArrayCp, PodCp, PytreeCp, register_adapter,
+    Box, FuncCp, JaxArrayCp, NdArrayCp, PodCp, PytreeCp, ShardCp,
+    register_adapter,
 )
 from repro.core.comm import (
     CommError, FTComm, NullComm, ProcFailedError, RevokedError,
@@ -26,7 +27,7 @@ from repro.core.tiers import StorageTier
 __all__ = [
     "AftAbortedError", "AftZone", "aft_zone",
     "Checkpoint", "Box", "FuncCp", "JaxArrayCp", "NdArrayCp", "PodCp",
-    "PytreeCp", "register_adapter",
+    "PytreeCp", "ShardCp", "register_adapter",
     "CommError", "FTComm", "NullComm", "ProcFailedError", "RevokedError",
     "CheckpointError", "CpBase", "IOContext", "CraftEnv", "StorageTier",
     "MemFabric", "MemStore", "MemTierError",

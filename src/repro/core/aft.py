@@ -63,6 +63,18 @@ def _drop_failed_memory(stats: dict) -> None:
         notify_rank_failures(failed)
 
 
+def _reprotect_memory(comm: FTComm, env: CraftEnv) -> int:
+    """Re-establish full RAM-fabric replica placement after a NON-SHRINKING
+    recovery: replacement ranks take over the failed ranks' holder slots, so
+    the fabric again tolerates ``CRAFT_MEM_REPLICAS`` failures (the spawned
+    ranks themselves hydrate their *own* slices lazily via
+    ``restart_if_needed()`` → ``MemStore.rehydrate``).  Returns slots seeded.
+    """
+    from repro.core.mem_level import MemFabric
+
+    return MemFabric.instance().reprotect(comm.size, env.mem_replicas)
+
+
 def _notify_scheduler(stats: dict) -> None:
     """Bump the process-wide recovery epoch: every live checkpoint policy
     resets its write-cost estimators (the survivor layout changed) and
@@ -108,6 +120,8 @@ def aft_zone(
             comm = comm.recover(policy=policy)
             stats = comm.last_recovery_stats()
             _drop_failed_memory(stats)
+            if policy == "NON-SHRINKING":
+                stats["mem_reseeded"] = _reprotect_memory(comm, env)
             _notify_scheduler(stats)
             log.warning(
                 "AFT recovery #%d (%s): failed=%s, %.3fs",
@@ -136,6 +150,7 @@ class AftZone:
                  max_recoveries: int = 16, env: Optional[CraftEnv] = None):
         env = env if env is not None else CraftEnv.capture()
         self.comm = comm
+        self.env = env
         self.policy = (policy or comm.default_recovery_policy
                        or env.comm_recovery_policy).upper()
         self.max_recoveries = max_recoveries
@@ -168,4 +183,6 @@ class AftZone:
         self.comm = self.comm.recover(policy=self.policy)
         stats = self.comm.last_recovery_stats()
         _drop_failed_memory(stats)
+        if self.policy == "NON-SHRINKING":
+            stats["mem_reseeded"] = _reprotect_memory(self.comm, self.env)
         _notify_scheduler(stats)

@@ -108,6 +108,11 @@ class Checkpoint:
             "reads": 0,
             "read_seconds": 0.0,
             "restore_tier": None,     # label of the tier the last read used
+            "tier_reads": {},         # successful restores per tier label
+            "restore_read_bytes": 0,  # payload bytes the last restore fetched
+                                      # (range reads < full payload on N→M)
+            "mem_rehydrations": 0,    # fabric slots re-seeded after mem
+                                      # restores (CRAFT_ELASTIC_HYDRATE)
             "preempt_flushes": 0,     # CRAFT_CP_SIGNAL-triggered sync flushes
             "final_writes": 0,        # walltime-guard final full checkpoints
             "read_repairs": 0,        # restores saved by repair-on-read
@@ -561,6 +566,7 @@ class Checkpoint:
             codec_version=self.env.codec_version,
             chunk_bytes=self.env.chunk_bytes,
             fanout=self._writer.run_parallel if self._writer else None,
+            reshard=self.env.reshard,
         )
         errors = []
         for store, slot, label in self._chained_stores():
@@ -609,6 +615,14 @@ class Checkpoint:
         overrides.setdefault("rel_root", Path(vdir))
         if base_dirs:
             overrides.setdefault("base_dirs", base_dirs)
+        # Elastic N→M: peer version roots this tier can reach (node tier on a
+        # shared FS) complement the materialized dir's shard files.
+        aux = store.aux_read_dirs(version) \
+            if hasattr(store, "aux_read_dirs") else []
+        if aux:
+            overrides.setdefault(
+                "aux_dirs", tuple(Path(a) for a in aux))
+        overrides["io_stats"] = {}
         ctx = dataclasses.replace(base_ctx, **overrides)
         try:
             # independent items restore in parallel (chunk digest checks
@@ -623,6 +637,16 @@ class Checkpoint:
         except CheckpointError as exc:
             return f"{label}: {exc}"
         self.stats["restore_tier"] = label
+        self.stats["tier_reads"][label] = \
+            self.stats["tier_reads"].get(label, 0) + 1
+        self.stats["restore_read_bytes"] = \
+            (ctx.io_stats or {}).get("read_bytes", 0)
+        if slot == "mem" and self.env.elastic_hydrate \
+                and hasattr(store, "rehydrate"):
+            # Replacement-rank hydration: a rank that restored from peer
+            # replicas re-seeds its own fabric slots so the redundancy
+            # group is whole again — all without touching disk.
+            self.stats["mem_rehydrations"] += store.rehydrate(version)
         self._prime_delta_state(version, restored_slot=slot)
         return None
 

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
-from repro.core import storage
+from repro.core import reshard, storage, tiers
 from repro.core.device_snapshot import DeviceSnapshotter
 
 T = TypeVar("T")
@@ -159,6 +159,157 @@ def _shard_slices(index) -> list:
     return out
 
 
+# --------------------------------------------------------------------------
+# elastic N→M assembly (shared by JaxArrayCp / PytreeCp / ShardCp reads)
+# --------------------------------------------------------------------------
+def _aux_item_dirs(dir_path: Path, ctx: IOContext) -> list:
+    """This item's directory inside each peer version root (``ctx.aux_dirs``),
+    as ``[(item_dir, root), ...]`` — only roots where the item exists."""
+    if not ctx.aux_dirs or ctx.rel_root is None:
+        return []
+    try:
+        rel = dir_path.relative_to(ctx.rel_root)
+    except ValueError:
+        return []
+    out = []
+    for root in ctx.aux_dirs:
+        d = Path(root) / rel
+        if d.is_dir():
+            out.append((d, Path(root)))
+    return out
+
+
+def _collect_manifests(dir_path: Path, ctx: IOContext, pattern: str) -> list:
+    """Union of writer manifests across the materialized dir and peer roots.
+
+    Returns ``[(manifest, dir, root), ...]`` ordered by manifest filename;
+    ``root`` is None for the main dir.  A manifest present in both (the
+    restoring rank's own file, mirrored on a peer) is taken from the main
+    dir — its delta refs resolve against ``ctx.base_dirs`` directly.
+    """
+    found = {}
+    for mp in dir_path.glob(pattern):
+        found[mp.name] = (storage.read_json(mp), dir_path, None)
+    for d, root in _aux_item_dirs(dir_path, ctx):
+        for mp in d.glob(pattern):
+            if mp.name not in found:
+                found[mp.name] = (storage.read_json(mp), d, root)
+    return [found[k] for k in sorted(found)]
+
+
+def _open_range_reader(path: Path, ctx: IOContext, root: Optional[Path]):
+    """A :class:`storage.ChunkRangeReader` for a shard file — delta refs in a
+    peer-root file resolve against *that* tree's sibling ``v-<B>`` dirs."""
+    if root is None:
+        return storage.ChunkRangeReader(path, ctx)
+    rel = path.relative_to(root)
+    bases = None
+    if ctx.base_dirs:
+        bases = {int(v): Path(root).parent / tiers.version_dir_name(int(v))
+                 for v in ctx.base_dirs}
+    return storage.ChunkRangeReader(path, ctx, rel=rel, base_dirs=bases)
+
+
+def _read_aux_array(path: Path, ctx: IOContext, root: Path) -> np.ndarray:
+    """Whole-array read of a peer-root file (full-span range read, so v2
+    refs chase the peer's base chain instead of ``ctx.base_dirs``)."""
+    rdr = _open_range_reader(path, ctx, root)
+    payload = bytes(rdr.read(0, rdr.nbytes))
+    return storage._restore_shape(payload, rdr.header, path)
+
+
+def _read_global_leaf(ctx: IOContext, gshape, dtype, sources, live,
+                      where: str):
+    """Assemble one global array from shard files written on any topology.
+
+    ``sources`` is ``[(index_spec, path, root), ...]`` — one entry per shard
+    file across every writer's manifest (``root`` None = materialized main
+    dir, else the peer version root the file lives under).  ``ctx.reshard``
+    picks the strategy:
+
+    * legacy full assembly — every file is read whole into a global buffer
+      (same cost profile as before this module existed);
+    * range assembly — each extent the restoring process actually needs is
+      mapped onto the writers' extents (:func:`reshard.overlap_runs`) and
+      only the overlapping chunk ranges are verified/decoded/fetched.
+
+    ``auto`` takes the range path when the live value is a ``jax.Array``
+    whose addressable extents don't span the global array (a real N→M or
+    multi-host restore) or when shards live in peer roots; a same-topology
+    single-host restore keeps the legacy path.  Returns a ``jax.Array`` on
+    the live sharding when ``live`` is one, else the global ndarray.
+    """
+    gshape = tuple(int(s) for s in gshape)
+    dtype = np.dtype(dtype)
+    exts = [(reshard.resolve_index(spec, gshape), Path(path), root)
+            for spec, path, root in sources]
+    full_ext = tuple((0, s) for s in gshape)
+    live_is_jax = isinstance(live, jax.Array)
+    if live_is_jax and tuple(live.shape) != gshape:
+        raise CheckpointError(
+            f"shape mismatch: stored {gshape} vs live {tuple(live.shape)} "
+            f"({where})"
+        )
+    dst_exts = None
+    if live_is_jax:
+        dst_exts = []
+        for s in live.addressable_shards:
+            e = reshard.resolve_index(s.index, gshape)
+            if e not in dst_exts:
+                dst_exts.append(e)
+    has_aux = any(root is not None for _, _, root in exts)
+    mode = getattr(ctx, "reshard", "auto")
+    use_range = (mode == "range") or has_aux or (
+        mode == "auto" and dst_exts is not None
+        and any(e != full_ext for e in dst_exts)
+    )
+    if not use_range:
+        out = np.empty(gshape, dtype=dtype)
+        filled = np.zeros(gshape, dtype=bool) if out.size else None
+        for ext, path, _root in exts:
+            arr = storage.read_array(path, ctx)
+            idx = tuple(slice(lo, hi) for lo, hi in ext)
+            _assign_shard(out, idx, arr)
+            if filled is not None:
+                filled[idx] = True
+        if filled is not None and not filled.all():
+            raise CheckpointError(
+                f"incomplete shard coverage under {where} "
+                f"({int(filled.sum())}/{filled.size} elements)"
+            )
+        if live_is_jax:
+            return jax.device_put(out, live.sharding)
+        return out
+    rdr_cache: dict = {}
+
+    def open_reader(key):
+        r = rdr_cache.get(key[0])
+        if r is None:
+            r = _open_range_reader(key[1], ctx, key[2])
+            rdr_cache[key[0]] = r
+        return r
+
+    srcs = [(e, (str(p), p, root)) for e, p, root in exts]
+    blocks = {}
+    for e in (dst_exts if dst_exts is not None else [full_ext]):
+        block, covered = reshard.assemble_extent(e, dtype, srcs, open_reader)
+        if covered is not None and not covered.all():
+            raise CheckpointError(
+                f"incomplete shard coverage for extent {e} under {where} "
+                f"({int(covered.sum())}/{covered.size} elements)"
+            )
+        blocks[e] = block
+    if live_is_jax:
+        shard_arrs = [
+            jax.device_put(
+                blocks[reshard.resolve_index(s.index, gshape)], s.device)
+            for s in live.addressable_shards
+        ]
+        return jax.make_array_from_single_device_arrays(
+            gshape, live.sharding, shard_arrs)
+    return blocks[full_ext]
+
+
 class JaxArrayCp(CpBase):
     """Checkpoint a (sharded) ``jax.Array`` held in a Box.
 
@@ -225,38 +376,24 @@ class JaxArrayCp(CpBase):
         )
 
     def read(self, dir_path: Path, ctx: IOContext) -> None:
-        metas = sorted(dir_path.glob("array-*.json"))
-        if not metas:
+        manifests = _collect_manifests(dir_path, ctx, "array-*.json")
+        if not manifests:
             raise CheckpointError(f"no array manifest under {dir_path}")
-        meta0 = storage.read_json(metas[0])
+        meta0 = manifests[0][0]
         gshape = tuple(meta0["global_shape"])
         dtype = storage._dtype_from_name(meta0["dtype"])
-        out = np.empty(gshape, dtype=dtype)
-        filled = np.zeros(gshape, dtype=bool) if out.size else None
-        for mp in metas:
-            m = storage.read_json(mp)
-            for sh in m["shards"]:
-                arr = storage.read_array(dir_path / sh["file"], ctx)
-                idx = tuple(
-                    slice(s[0], s[1]) for s in sh["index"]
-                )
-                _assign_shard(out, idx, arr)
-                if filled is not None:
-                    filled[idx] = True
-        if filled is not None and not filled.all():
-            raise CheckpointError(
-                f"incomplete shard coverage under {dir_path} "
-                f"({filled.sum()}/{filled.size} elements)"
-            )
+        sources = [
+            (sh["index"], d / sh["file"], root)
+            for m, d, root in manifests
+            for sh in m["shards"]
+        ]
         live = self.box.value
-        if isinstance(live, jax.Array) and tuple(live.shape) != gshape:
-            raise CheckpointError(
-                f"shape mismatch: stored {gshape} vs live {tuple(live.shape)}"
-            )
+        value = _read_global_leaf(
+            ctx, gshape, dtype, sources, live, str(dir_path))
         if isinstance(live, jax.Array):
-            self.box.value = jax.device_put(out, live.sharding)
+            self.box.value = value
         else:  # no live value to infer placement from: single-device put
-            self.box.value = jnp.asarray(out)
+            self.box.value = jnp.asarray(value)
 
     def nbytes(self) -> int:
         return sum(h.nbytes for _, h, _ in self._buf)
@@ -353,13 +490,14 @@ class PytreeCp(CpBase):
         storage.write_json(dir_path / f"tree-{ctx.proc_rank}.json", manifest)
 
     def read(self, dir_path: Path, ctx: IOContext) -> None:
-        metas = sorted(dir_path.glob("tree-*.json"))
-        if not metas:
-            raise CheckpointError(f"no pytree manifest under {dir_path}")
         # parse every writer's manifest once up front — the per-leaf shard
-        # merge below would otherwise re-parse them per leaf (O(leaves²))
-        parsed = [storage.read_json(mp) for mp in metas]
-        manifest = parsed[0]
+        # merge below would otherwise re-parse them per leaf (O(leaves²));
+        # peer version roots (elastic N→M node-tier restores) contribute
+        # their manifests alongside the materialized dir's
+        parsed = _collect_manifests(dir_path, ctx, "tree-*.json")
+        if not parsed:
+            raise CheckpointError(f"no pytree manifest under {dir_path}")
+        manifest = parsed[0][0]
         live_leaves, treedef = jax.tree_util.tree_flatten(self.box.value)
         if manifest["n_leaves"] != len(live_leaves):
             raise CheckpointError(
@@ -371,22 +509,26 @@ class PytreeCp(CpBase):
             if spec["kind"] == "jax":
                 gshape = tuple(spec["global_shape"])
                 dtype = storage._dtype_from_name(spec["dtype"])
-                out = np.empty(gshape, dtype=dtype)
-                for m in parsed:  # merge shard sets from all writer procs
-                    for sh in m["leaves"][i].get("shards", []):
-                        arr = storage.read_array(dir_path / sh["file"], ctx)
-                        idx = tuple(slice(s[0], s[1]) for s in sh["index"])
-                        _assign_shard(out, idx, arr)
-                if isinstance(live, jax.Array):
-                    if tuple(live.shape) != gshape:
-                        raise CheckpointError(
-                            f"leaf {i} shape mismatch {gshape} vs {live.shape}"
-                        )
-                    new_leaves.append(jax.device_put(out, live.sharding))
-                else:
-                    new_leaves.append(jnp.asarray(out))
+                sources = [    # merge shard sets from all writer procs
+                    (sh["index"], d / sh["file"], root)
+                    for m, d, root in parsed
+                    for sh in m["leaves"][i].get("shards", [])
+                ]
+                value = _read_global_leaf(
+                    ctx, gshape, dtype, sources, live,
+                    f"{dir_path} (leaf {i})")
+                new_leaves.append(
+                    value if isinstance(live, jax.Array)
+                    else jnp.asarray(value))
             elif spec["kind"] == "np":
-                arr = storage.read_array(dir_path / spec["file"], ctx)
+                # every writer stores an identical copy — prefer the
+                # materialized dir's, fall back to any peer root's
+                _m, d, root = next(
+                    (e for e in parsed if e[2] is None), parsed[0])
+                if root is None:
+                    arr = storage.read_array(d / spec["file"], ctx)
+                else:   # replicated leaf only present in a peer's tree
+                    arr = _read_aux_array(d / spec["file"], ctx, root)
                 # memory-tier reads hand out read-only views of shared
                 # buffers; a tree leaf is owned by the application, so copy
                 new_leaves.append(arr if arr.flags.writeable else arr.copy())
@@ -402,6 +544,95 @@ class PytreeCp(CpBase):
             elif item["kind"] == "np":
                 total += item["data"].nbytes
         return total
+
+
+# --------------------------------------------------------------------------
+# one rank's rectangular slice of a global array (host-side domain
+# decomposition — the paper's redistributable-domain case)
+# --------------------------------------------------------------------------
+class ShardCp(CpBase):
+    """Checkpoint one rank's block of a global array, held as a host ndarray.
+
+    The on-disk format is :class:`JaxArrayCp`'s (``shard-<rank>-<i>.bin`` +
+    ``array-<rank>.json``), so the file set is topology independent: a
+    checkpoint written by N ``ShardCp`` ranks restores onto M ranks with any
+    other block decomposition — each restoring rank range-reads exactly its
+    own extent out of the writers' chunk grids, never assembling the global
+    array in memory.  ``box.value`` holds the writable block.
+    """
+
+    def __init__(self, box: Box, global_shape, index):
+        if not isinstance(box, Box):
+            raise TypeError("ShardCp expects a Box holding an ndarray block")
+        self.box = box
+        self.global_shape = tuple(int(s) for s in global_shape)
+        self.index = reshard.resolve_index(index, self.global_shape)
+        block = np.asarray(box.value)
+        want = tuple(hi - lo for lo, hi in self.index)
+        if self.global_shape and tuple(block.shape) != want:
+            raise CheckpointError(
+                f"block shape {tuple(block.shape)} does not match extent "
+                f"{self.index} of global {self.global_shape}"
+            )
+        self._buf = block.copy()
+
+    def update(self) -> None:
+        self._buf = np.asarray(self.box.value).copy()
+
+    def write(self, dir_path: Path, ctx: IOContext) -> None:
+        fname = f"shard-{ctx.proc_rank}-0.bin"
+        storage.write_array(dir_path / fname, self._buf, ctx)
+        storage.write_json(
+            dir_path / f"array-{ctx.proc_rank}.json",
+            {
+                "global_shape": list(self.global_shape),
+                "dtype": storage._dtype_to_name(self._buf.dtype),
+                "shards": [{
+                    "file": fname,
+                    "index": [[lo, hi] for lo, hi in self.index],
+                }],
+            },
+        )
+
+    def read(self, dir_path: Path, ctx: IOContext) -> None:
+        manifests = _collect_manifests(dir_path, ctx, "array-*.json")
+        if not manifests:
+            raise CheckpointError(f"no array manifest under {dir_path}")
+        meta0 = manifests[0][0]
+        gshape = tuple(meta0["global_shape"])
+        if gshape != self.global_shape:
+            raise CheckpointError(
+                f"global shape mismatch: stored {gshape} vs live "
+                f"{self.global_shape}"
+            )
+        dtype = storage._dtype_from_name(meta0["dtype"])
+        srcs = [
+            (reshard.resolve_index(sh["index"], gshape),
+             (str(d / sh["file"]), d / sh["file"], root))
+            for m, d, root in manifests
+            for sh in m["shards"]
+        ]
+        rdr_cache: dict = {}
+
+        def open_reader(key):
+            r = rdr_cache.get(key[0])
+            if r is None:
+                r = _open_range_reader(key[1], ctx, key[2])
+                rdr_cache[key[0]] = r
+            return r
+
+        block, covered = reshard.assemble_extent(
+            self.index, dtype, srcs, open_reader)
+        if covered is not None and not covered.all():
+            raise CheckpointError(
+                f"incomplete shard coverage for extent {self.index} under "
+                f"{dir_path} ({int(covered.sum())}/{covered.size} elements)"
+            )
+        self.box.value = block
+        self._buf = block.copy()
+
+    def nbytes(self) -> int:
+        return self._buf.nbytes
 
 
 def _pod_json(v):

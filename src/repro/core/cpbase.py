@@ -85,6 +85,18 @@ class IOContext:
     # ``"enc": "raw"``) instead of run through zstd.  0 disables the gate.
     zstd_level: int = 3
     zstd_gate_bits: float = 0.0
+    # --- elastic reshard-on-restore (CRAFT_RESHARD) -------------------------
+    # Read side: additional version roots whose shard files complement
+    # ``rel_root`` (node-tier N→M restores: other nodes' v-<K> trees,
+    # reachable over the shared FS).  Checkpointables union the shard
+    # manifests across rel_root + aux_dirs; delta refs inside an aux file
+    # resolve against *that* root's sibling base dirs, not ``base_dirs``.
+    aux_dirs: Optional[tuple] = None
+    # Assembly strategy for sharded global arrays: "auto" range-reads only
+    # when the restoring extent is a strict sub-extent of the global array
+    # (or shards live in aux dirs), "range" always range-reads, "full"
+    # forces the legacy whole-array assembly.
+    reshard: str = "auto"
     # --- device-resident snapshot path (CRAFT_DEVICE_SNAPSHOT) --------------
     # Precomputed chunk metadata, keyed like ``checksum_db`` (manifest name):
     # {"nbytes", "chunk_bytes", "rdigests", "dirty", "entropy_bits"} produced
@@ -141,6 +153,16 @@ class IOContext:
                 self.io_stats["chunks"] = self.io_stats.get("chunks", 0) + chunks
                 self.io_stats["ref_chunks"] = (
                     self.io_stats.get("ref_chunks", 0) + ref_chunks
+                )
+
+    def record_read(self, nbytes: int) -> None:
+        """Account payload bytes physically fetched at restore (range reads
+        report only the chunks they touched — the elastic-restore savings
+        show up as ``io_stats['read_bytes']`` < the full payload size)."""
+        if self.io_stats is not None:
+            with self._lock:
+                self.io_stats["read_bytes"] = (
+                    self.io_stats.get("read_bytes", 0) + nbytes
                 )
 
 

@@ -88,6 +88,17 @@ class CraftEnv:
                                      # computed on the accelerator and only
                                      # dirty chunks cross device→host
                                      # (default off)
+    # --- elastic restore (docs/architecture.md §elastic restore) -----------
+    reshard: str                     # CRAFT_RESHARD: auto|range|full — N→M
+                                     # restore assembly strategy (auto range-
+                                     # reads only when the restoring extent
+                                     # is a sub-extent of the global array or
+                                     # shards live in peer version trees)
+    elastic_hydrate: bool            # CRAFT_ELASTIC_HYDRATE: after a mem-tier
+                                     # restore, re-seed the restoring rank's
+                                     # RAM-fabric slots from surviving peer
+                                     # replicas so replacement ranks rejoin
+                                     # the redundancy group (default: 1)
     # --- memory tier (docs/architecture.md §memory tier) -------------------
     tier_chain: tuple                # CRAFT_TIER_CHAIN: ordered subset of
                                      # mem,node,pfs (default "node,pfs";
@@ -190,6 +201,11 @@ class CraftEnv:
         chunk_bytes = int(env.get("CRAFT_CHUNK_BYTES", str(4 * 1024 * 1024)))
         if chunk_bytes <= 0:
             raise ValueError(f"CRAFT_CHUNK_BYTES={chunk_bytes!r}")
+        reshard = env.get("CRAFT_RESHARD", "auto").lower()
+        if reshard not in ("auto", "range", "full"):
+            raise ValueError(
+                f"CRAFT_RESHARD={reshard!r}: expected auto|range|full")
+        elastic_hydrate = _bool(env, "CRAFT_ELASTIC_HYDRATE", True)
         chain_raw = env.get("CRAFT_TIER_CHAIN", "node,pfs").lower()
         tier_chain = tuple(t.strip() for t in chain_raw.split(",") if t.strip())
         if not tier_chain or len(set(tier_chain)) != len(tier_chain) or not (
@@ -258,6 +274,8 @@ class CraftEnv:
             delta=delta,
             delta_max_chain=delta_max_chain,
             device_snapshot=device_snapshot,
+            reshard=reshard,
+            elastic_hydrate=elastic_hydrate,
             tier_chain=tier_chain,
             mem_replicas=mem_replicas,
             mem_budget_bytes=mem_budget,

@@ -291,6 +291,54 @@ class MemFabric:
         self.replace_entry(name, owner, version, rel, bad)
         return rel
 
+    # -- elastic rehydration (CRAFT_ELASTIC_HYDRATE / NON-SHRINKING) --------
+    def reseed(self, name: str, holders: List[int], owner: int,
+               version: int) -> int:
+        """Re-place ``owner``'s shard set of ``version`` into every listed
+        holder slot that lost it (a replacement rank re-entering the fabric
+        after hydrating from peer replicas).  Returns slots seeded; 0 when
+        no surviving copy exists anywhere.
+        """
+        with self._lock:
+            byname = self.slots.get(name, {})
+            mv = byname.get(owner, {}).get((owner, version))
+            if mv is None:
+                for holder, slot in byname.items():
+                    mv = slot.get((owner, version))
+                    if mv is not None:
+                        break
+            if mv is None:
+                return 0
+            placed = 0
+            for holder in holders:
+                slot = byname.setdefault(holder, {})
+                if (owner, version) not in slot:
+                    slot[(owner, version)] = mv
+                    placed += 1
+            return placed
+
+    def reprotect(self, size: int, replicas: int) -> int:
+        """Restore full replica placement after a topology change.
+
+        For every resident (name, version, owner) with a surviving copy,
+        re-seed the round-robin holder set ``owner, owner+1 .. owner+R`` mod
+        ``size`` — the NON-SHRINKING recovery path calls this so replacement
+        ranks hold the replicas their predecessors did and the fabric again
+        tolerates ``R`` failures.  Returns total slots seeded.
+        """
+        replicas = min(max(0, replicas), max(0, size - 1))
+        total = 0
+        with self._lock:
+            names = list(self.slots)
+        for name in names:
+            for version, world in self.versions(name).items():
+                for owner in range(min(world, size)):
+                    holders = [owner] + [
+                        (owner + i) % size for i in range(1, replicas + 1)
+                    ]
+                    total += self.reseed(name, holders, owner, version)
+        return total
+
     # -- fault injection / lifecycle ----------------------------------------
     def drop_rank(self, rank: int) -> None:
         """Model the fail-stop RAM loss of ``rank`` across every checkpoint."""
@@ -554,6 +602,15 @@ class MemStore(StorageTier):
         # path would cost exactly the codec pass this tier exists to skip
         return {"array_cache": self._caches.get(version, {}),
                 "checksum": "none"}
+
+    def rehydrate(self, version: int) -> int:
+        """Re-seed this rank's own fabric slots for ``version`` from peer
+        replicas (replacement-rank hydration: after restoring through the
+        fabric, the rank re-enters the redundancy group so the next failure
+        is again survivable — all RAM-to-RAM, no disk).  Returns the number
+        of slots seeded (0 = already whole)."""
+        return self.fabric.reseed(
+            self.name, self._holders(self.rank), self.rank, version)
 
     def retained_versions(self) -> List[int]:
         """Completely resident fabric versions (the scrubber's walk list)."""

@@ -60,16 +60,28 @@ class NestedRegistry:
 
         Paper Table 1: once CL1-v1 exists, the stale CL2 versions from the
         previous outer iteration must never be restored.
+
+        The walk completes even when one child's storage fails mid-wipe
+        (first error re-raised afterwards): with elastic restores, peer node
+        trees are live restore sources, so stopping early would leave a
+        sibling's stale version reachable across a topology change.
         """
         stack = self.children(parent)
         seen = set()
+        first_exc = None
         while stack:
             child = stack.pop()
             if id(child) in seen:
                 continue
             seen.add(id(child))
-            child.invalidate()
+            try:
+                child.invalidate()
+            except Exception as exc:
+                if first_exc is None:
+                    first_exc = exc
             stack.extend(self.children(child))
+        if first_exc is not None:
+            raise first_exc
 
 
 #: process-global registry used by Checkpoint.sub_cp()

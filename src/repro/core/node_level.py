@@ -108,6 +108,24 @@ class NodeStore(StorageTier):
         """Another node's v-<K> dir — path-only, no mkdir side effects."""
         return self._node_dir(member) / self.name / tiers.version_dir_name(version)
 
+    def _peer_node_roots(self) -> List[Path]:
+        """Other nodes' ``<base>/node-<nid>/<name>`` trees visible on the
+        shared FS — the source of an elastic N→M restore's missing shards
+        (the current geometry's node count doesn't bound the scan: a shrink
+        must still see nodes past ``n_nodes``)."""
+        roots = []
+        for p in sorted(self.base.glob("node-*")):
+            try:
+                nid = int(p.name.split("-", 1)[1])
+            except ValueError:
+                continue
+            if nid == self.nid:
+                continue
+            root = p / self.name
+            if root.is_dir():
+                roots.append(root)
+        return roots
+
     # -- staging API (Checkpoint._write_to_store) ------------------------------
     def stage(self, version: int) -> Path:
         return self._local.stage(version)
@@ -181,7 +199,24 @@ class NodeStore(StorageTier):
                         best = max(best, v)
         elif self.redundancy == "RS":
             best = max(best, erasure.latest_rs_version(self))
+        # Elastic N→M: a version any peer node holds is restorable here too —
+        # either shard-by-shard through aux_read_dirs or by whole-tree copy
+        for root in self._peer_node_roots():
+            for v, p in tiers.list_version_dirs(root):
+                if v > best and any(p.iterdir()):
+                    best = max(best, v)
         return best
+
+    def aux_read_dirs(self, version: int) -> List[Path]:
+        """Peer nodes' ``v-<K>`` trees holding shards this node's ranks may
+        need after a topology change (reads pull only overlapping chunk
+        ranges out of them — see ``checkpointables._read_global_leaf``)."""
+        out = []
+        for root in self._peer_node_roots():
+            d = root / tiers.version_dir_name(version)
+            if d.is_dir():
+                out.append(d)
+        return out
 
     def version_dir(self, version: int) -> Path:
         return self._local.version_dir(version)
@@ -192,16 +227,34 @@ class NodeStore(StorageTier):
         if self._complete(vdir):
             return vdir
         try:
+            recovered = None
             if self.redundancy == "PARTNER" and self.n_nodes > 1:
-                return self._recover_partner(version)
-            if self.redundancy == "XOR":
-                return self._recover_xor(version)
-            if self.redundancy == "RS":
-                return erasure.recover_rs(self, version)
+                recovered = self._recover_partner(version)
+            elif self.redundancy == "XOR":
+                recovered = self._recover_xor(version)
+            elif self.redundancy == "RS":
+                recovered = erasure.recover_rs(self, version)
         except (OSError, CheckpointError, json.JSONDecodeError) as exc:
             raise CheckpointError(
                 f"node-tier recovery of {self.name} v-{version} failed: {exc}"
             ) from exc
+        if recovered is not None:
+            return recovered
+        # Elastic M>N: this node never wrote the version (it joined after the
+        # topology change) — seed the local tree from any peer node's copy so
+        # non-array files (pods, manifests) are present; array shards beyond
+        # the copied node's are range-read via aux_read_dirs.
+        return self._recover_from_peer(version)
+
+    def _recover_from_peer(self, version: int) -> Optional[Path]:
+        for root in self._peer_node_roots():
+            src = root / tiers.version_dir_name(version)
+            if src.is_dir() and any(src.iterdir()):
+                dst = self._local.version_dir(version)
+                shutil.rmtree(dst, ignore_errors=True)
+                dst.parent.mkdir(parents=True, exist_ok=True)
+                shutil.copytree(src, dst)
+                return dst
         return None
 
     def _complete(self, vdir: Path) -> bool:
@@ -254,17 +307,25 @@ class NodeStore(StorageTier):
         return dst
 
     def invalidate_all(self) -> None:
+        """Wipe this checkpoint from *every* node tree, not just our own.
+
+        With elastic restores, peer trees are live restore sources
+        (``aux_read_dirs`` / peer-copy recovery) — leaving a stale sibling
+        behind after a nested-parent publish would let a topology change
+        resurrect an invalidated child version.  The walk covers every
+        ``node-*`` dir on the shared FS plus every mirror and parity tree
+        that could name this checkpoint.
+        """
         self._local.invalidate_all()
-        if self.redundancy == "PARTNER" and self.n_nodes > 1:
-            shutil.rmtree(self._mirror_root(self.nid), ignore_errors=True)
-        elif self.redundancy == "XOR":
-            g0 = self._group(self.nid)[0]
-            for holder in self._group(self.nid):
-                shutil.rmtree(
-                    self._node_dir(holder) / f"xor-group-{g0}" / self.name,
-                    ignore_errors=True,
-                )
-        elif self.redundancy == "RS":
+        for p in self.base.glob("node-*"):
+            shutil.rmtree(p / self.name, ignore_errors=True)
+            for mirror in p.glob("mirror-of-*"):
+                shutil.rmtree(mirror / self.name, ignore_errors=True)
+            for parity in p.glob("xor-group-*"):
+                shutil.rmtree(parity / self.name, ignore_errors=True)
+            for parity in p.glob("rs-group-*"):
+                shutil.rmtree(parity / self.name, ignore_errors=True)
+        if self.redundancy == "RS":
             erasure.invalidate_rs(self)
 
     # -- scrub hooks (core/scrubber.py) ---------------------------------------

@@ -226,6 +226,19 @@ class StorageTier(abc.ABC):
         vdir = self.version_dir(version)
         return vdir if vdir.is_dir() else None
 
+    def aux_read_dirs(self, version: int) -> List[Path]:
+        """Peer version roots that complement :meth:`materialize`'s result.
+
+        An elastic N→M restore may find its own slice scattered across shard
+        files this tier stored *for other ranks* — e.g. the node tier's
+        sibling ``node-<nid>`` trees on a shared filesystem.  Tiers that can
+        reach those trees return their ``v-<K>`` directories here; the
+        checkpointables then union shard manifests across the materialized
+        dir and these roots.  Default: none (single-root tiers like the PFS
+        store already hold every rank's files in one directory).
+        """
+        return []
+
     def retained_versions(self) -> List[int]:
         """Versions locally resident on this tier — the scrubber's walk list.
 

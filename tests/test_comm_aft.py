@@ -2,11 +2,14 @@
 import threading
 import time
 
+import numpy as np
 import pytest
 
+from repro.core import Box, Checkpoint, ShardCp
 from repro.core.aft import AftAbortedError, aft_zone
 from repro.core.comm import ProcFailedError, RevokedError
 from repro.core.comm_sim import SimComm, SimWorld
+from repro.core.elastic import block_index
 from repro.core.env import CraftEnv
 
 
@@ -197,6 +200,71 @@ class TestAftZone:
 
         out = world.run(fn, timeout=60)
         assert "aborted" in set(out.values())
+
+    def test_nonshrinking_replacement_hydrates_from_peer_memory(self, tmp_path):
+        """Kill k ranks mid-epoch under NON-SHRINKING: the spawned
+        replacements restore their shard from surviving peers' RAM-fabric
+        replicas — restore tier "mem", ZERO pfs reads, zero physical read
+        bytes — and the fabric is re-protected (replica slots reseeded)."""
+        src = (np.arange(13 * 5, dtype=np.float32).reshape(13, 5) + 1.5)
+        env = _env(
+            CRAFT_CP_PATH=str(tmp_path / "pfs"),
+            CRAFT_TIER_CHAIN="mem,pfs",
+            CRAFT_MEM_REPLICAS="2",
+            CRAFT_MEM_SCRATCH=str(tmp_path / "shm"),
+            CRAFT_USE_SCR="0",
+            CRAFT_IO_WORKERS="1",
+        )
+        world = SimWorld(4, spare_nodes=2, env=env)
+        restores = {}   # (rank, epoch, is_replacement) -> restore telemetry
+        reseeds = []    # mem_reseeded from each member's recovery stats
+
+        def body(comm):
+            cp = Checkpoint("state", comm, env=env)
+            it = Box(0)
+            idx = block_index(src.shape, comm.rank, comm.size)
+            wbox = Box(np.zeros_like(src[idx]))
+            cp.add("it", it)
+            cp.add("w", ShardCp(wbox, src.shape, idx))
+            cp.commit()
+            if cp.restart_if_needed():
+                restores[(comm.rank, comm.epoch, comm.is_replacement())] = {
+                    "tier": cp.stats["restore_tier"],
+                    "pfs_reads": cp.stats["tier_reads"].get("pfs", 0),
+                    "read_bytes": cp.stats["restore_read_bytes"],
+                    "block_ok": np.array_equal(wbox.value, src[idx]),
+                    "it": it.value,
+                }
+            while it.value < 5:
+                it.value += 1
+                np.copyto(wbox.value, src[idx])
+                cp.update_and_write()
+                if comm.rank == 0 and comm.epoch == 0 and it.value == 2:
+                    world.kill(2)
+                    world.kill(3)
+                comm.barrier()
+                time.sleep(0.002)
+            cp.close()
+            return ("done", comm.size)
+
+        def fn(c):
+            return aft_zone(
+                c, body, env=env,
+                on_recovery=lambda comm, stats: reseeds.append(
+                    stats.get("mem_reseeded", 0)))
+
+        out = world.run(fn, timeout=180)
+        assert all(v == ("done", 4) for v in out.values())
+        # the spawned replacements hydrated purely from peer memory
+        repl = {k: v for k, v in restores.items() if k[2]}
+        assert repl, restores
+        for info in repl.values():
+            assert info["tier"] == "mem", info
+            assert info["pfs_reads"] == 0, info
+            assert info["read_bytes"] == 0, info
+            assert info["block_ok"] and info["it"] >= 1, info
+        # the fabric was re-protected: someone reseeded replica slots
+        assert sum(reseeds) > 0, reseeds
 
     def test_shrinking_zone_result(self):
         world = SimWorld(4, env=_env(CRAFT_COMM_RECOVERY_POLICY="SHRINKING"))

@@ -1,0 +1,272 @@
+"""Elastic reshard-on-restore: cross-topology restore matrix (ISSUE 7).
+
+A checkpoint written on N ranks must restore **bit-identically** onto M≠N
+ranks, across all three array codecs and all three tiers — each restoring
+rank assembling its own block extent from the writers' per-rank chunk grids
+(``ShardCp`` + ``reshard.overlap_runs`` + ``storage.ChunkRangeReader``).
+Edge leaves ride along on every topology: 0-d scalars (replicated), empty
+arrays, unaligned multi-chunk grids, and bfloat16.
+
+All ranks run in one process via ``FakeComm`` (the mem-tier test idiom):
+ranks write sequentially into shared storage exactly as SPMD processes
+would, then a *different* number of ranks restores.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import Box, Checkpoint, ShardCp
+from repro.core.checkpointables import NdArrayCp
+from repro.core.elastic import block_index
+from repro.core.env import CraftEnv
+
+from tests.test_mem_level import FakeComm
+
+
+# global source state — the same on every topology; dtype mix covers
+# unaligned multi-chunk float32, bf16, 0-d, and empty leaves
+_W = (np.arange(19 * 7, dtype=np.float32).reshape(19, 7) * 0.5 + 3.25)
+_BF16 = (np.linspace(-4.0, 4.0, 33).astype(jnp.bfloat16))
+_SCALAR = np.float64(1234.5678)
+_EMPTY = np.empty((0,), dtype=np.float32)
+
+
+def _env(tmp_path, **extra):
+    base = {
+        "CRAFT_CP_PATH": str(tmp_path / "pfs"),
+        "CRAFT_NODE_CP_PATH": str(tmp_path / "node"),
+        "CRAFT_NODE_REDUNDANCY": "LOCAL",
+        "CRAFT_TIER_CHAIN": "pfs",
+        "CRAFT_MEM_SCRATCH": str(tmp_path / "shm"),
+        "CRAFT_CHUNK_BYTES": "64",       # multi-chunk, unaligned grids
+        "CRAFT_IO_WORKERS": "1",
+    }
+    base.update(extra)
+    return CraftEnv.capture(base)
+
+
+def _boxes_for(rank, size):
+    """This rank's blocks of the global state (balanced axis-0 split)."""
+    w_idx = block_index(_W.shape, rank, size)
+    b_idx = block_index(_BF16.shape, rank, size)
+    e_idx = block_index(_EMPTY.shape, rank, size)
+    return {
+        "w": (Box(_W[w_idx].copy()), _W.shape, w_idx),
+        "bf16": (Box(np.asarray(_BF16)[b_idx].copy()), _BF16.shape, b_idx),
+        "scalar": (Box(np.asarray(_SCALAR).copy()), (), ()),
+        "empty": (Box(_EMPTY[e_idx].copy()), _EMPTY.shape, e_idx),
+    }
+
+
+def _build_cp(rank, size, env, zero=False):
+    cp = Checkpoint("elastic", FakeComm(rank, size), env=env)
+    boxes = {}
+    for key, (box, gshape, idx) in _boxes_for(rank, size).items():
+        if zero:
+            box.value = np.zeros_like(box.value)
+        boxes[key] = box
+        cp.add(key, ShardCp(box, gshape, idx))
+    it = Box(0 if zero else 7)
+    boxes["it"] = it
+    cp.add("it", it)
+    cp.commit()
+    return cp, boxes
+
+
+# Sequential-rank idiom for the shared-staging pfs tier: construct every
+# rank's Checkpoint BEFORE anyone writes (rank 0's store ctor sweeps stale
+# .tmp dirs), then write rank 0 last — its publish() atomically moves the
+# shared staged dir holding every rank's files.  In real SPMD runs the
+# barriers inside publish() provide both orderings.
+def _ranks_last_leader(n):
+    return list(range(1, n)) + [0]
+
+
+def _write_topology(n, env):
+    cps = [_build_cp(rank, n, env) for rank in range(n)]
+    for rank in _ranks_last_leader(n):
+        assert cps[rank][0].update_and_write()
+    for cp, _ in cps:
+        cp.close()
+
+
+def _restore_and_check(m, env, expect_tier=None):
+    for rank in range(m):
+        cp, boxes = _build_cp(rank, m, env, zero=True)
+        assert cp.restart_if_needed()
+        if expect_tier is not None:
+            assert cp.stats["restore_tier"] == expect_tier
+        assert boxes["it"].value == 7
+        # bit-identity of every restored block against the global source
+        for key, src in (("w", _W), ("bf16", np.asarray(_BF16)),
+                         ("empty", _EMPTY)):
+            idx = block_index(src.shape, rank, m)
+            got = np.asarray(boxes[key].value)
+            assert got.dtype == src.dtype, key
+            assert got.tobytes() == src[idx].tobytes(), (key, rank, m)
+        assert np.asarray(boxes["scalar"].value).tobytes() \
+            == np.asarray(_SCALAR).tobytes()
+        cp.close()
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8])
+@pytest.mark.parametrize("m", [1, 2, 3, 4])
+def test_n_to_m_restore_pfs(tmp_path, n, m):
+    env = _env(tmp_path)
+    _write_topology(n, env)
+    _restore_and_check(m, env, expect_tier="pfs")
+
+
+@pytest.mark.parametrize("codec", [0, 1, 2])
+@pytest.mark.parametrize("tier", ["mem", "node", "pfs"])
+def test_codec_tier_matrix(tmp_path, codec, tier):
+    extra = {"CRAFT_TIER_CHAIN": tier,
+             "CRAFT_CODEC_VERSION": str(codec)}
+    if codec == 2:
+        extra["CRAFT_DELTA"] = "1"
+    env = _env(tmp_path, **extra)
+    _write_topology(4, env)
+    _restore_and_check(3, env, expect_tier=tier)
+
+
+def test_grow_beyond_writers_node_tier(tmp_path):
+    """M > N on the node tier: the new nodes never wrote the version — they
+    seed from a peer tree and range-read the rest via aux dirs."""
+    env = _env(tmp_path, CRAFT_TIER_CHAIN="node")
+    _write_topology(2, env)
+    _restore_and_check(4, env, expect_tier="node")
+
+
+def test_delta_chain_across_three_topologies(tmp_path):
+    """A v2 delta version written on topology B whose base was written on
+    topology A restores on topology C — refs chase across both layouts."""
+    env = _env(tmp_path, CRAFT_DELTA="1")
+    rep = np.arange(64, dtype=np.float64)  # rank-replicated, delta-friendly
+
+    def build(rank, size, live, zero_w=False):
+        cp = Checkpoint("delta3", FakeComm(rank, size), env=env)
+        cp.add("rep", NdArrayCp(live))
+        block = _W[block_index(_W.shape, rank, size)]
+        box = Box(np.zeros_like(block) if zero_w else block.copy())
+        cp.add("w", ShardCp(box, _W.shape, block_index(_W.shape, rank, size)))
+        cp.commit()
+        return cp, box
+
+    # topology A (N=2): v-1, full write including a replicated array.bin
+    cps = [build(rank, 2, rep.copy()) for rank in range(2)]
+    for rank in _ranks_last_leader(2):
+        assert cps[rank][0].update_and_write()
+    for cp, _ in cps:
+        cp.close()
+
+    # topology B (M=3): restore v-1 (primes delta state), write v-2 — the
+    # unchanged replicated array becomes all-ref chunks against v-1
+    cps = [build(rank, 3, rep.copy(), zero_w=True) for rank in range(3)]
+    for rank in _ranks_last_leader(3):
+        cp, box = cps[rank]
+        assert cp.restart_if_needed()
+        np.copyto(box.value, _W[block_index(_W.shape, rank, 3)])
+        assert cp.update_and_write()
+        if rank == 0:
+            # the replicated file really is a delta write (chunks skipped)
+            assert cp.stats["delta_chunks_skipped"] > 0
+    for cp, _ in cps:
+        cp.close()
+
+    # topology C (M'=4): restore v-2, chasing refs into the v-1 base that
+    # topology A wrote
+    for rank in range(4):
+        live = np.zeros_like(rep)
+        cp, box = build(rank, 4, live, zero_w=True)
+        assert cp.restart_if_needed()
+        assert cp.version == 2
+        assert live.tobytes() == rep.tobytes()
+        assert np.asarray(box.value).tobytes() \
+            == _W[block_index(_W.shape, rank, 4)].tobytes()
+        cp.close()
+
+
+def test_range_restore_reads_less_than_payload(tmp_path):
+    """CRAFT_RESHARD=range: a rank restoring 1/4 of the global array
+    physically fetches well under half of the stored payload."""
+    big = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    env = _env(tmp_path, CRAFT_RESHARD="range", CRAFT_CHUNK_BYTES="256")
+
+    def build(rank):
+        cp = Checkpoint("big", FakeComm(rank, 4), env=env)
+        box = Box(big[block_index(big.shape, rank, 4)].copy())
+        cp.add("w", ShardCp(box, big.shape, block_index(big.shape, rank, 4)))
+        cp.commit()
+        return cp
+
+    cps = [build(rank) for rank in range(4)]
+    for rank in _ranks_last_leader(4):
+        assert cps[rank].update_and_write()
+    for cp in cps:
+        cp.close()
+    idx = block_index(big.shape, 0, 4)
+    box = Box(np.zeros_like(big[idx]))
+    cp = Checkpoint("big", FakeComm(0, 4), env=env)
+    cp.add("w", ShardCp(box, big.shape, idx))
+    cp.commit()
+    assert cp.restart_if_needed()
+    assert np.asarray(box.value).tobytes() == big[idx].tobytes()
+    assert 0 < cp.stats["restore_read_bytes"] < big.nbytes // 2
+    cp.close()
+
+
+def test_jax_array_restore_across_topologies(tmp_path):
+    """JaxArrayCp manifests written by several ranks reassemble on another
+    rank count (single-device extents are full, so coverage overlaps)."""
+    src = np.arange(40, dtype=np.float32).reshape(8, 5)
+    env = _env(tmp_path)
+
+    def build(rank):
+        cp = Checkpoint("jx", FakeComm(rank, 3), env=env)
+        cp.add("x", Box(jnp.asarray(src)))
+        cp.commit()
+        return cp
+
+    cps = [build(rank) for rank in range(3)]
+    for rank in _ranks_last_leader(3):
+        assert cps[rank].update_and_write()
+    for cp in cps:
+        cp.close()
+    box = Box(jnp.zeros_like(jnp.asarray(src)))
+    cp = Checkpoint("jx", FakeComm(0, 2), env=env)
+    cp.add("x", box)
+    cp.commit()
+    assert cp.restart_if_needed()
+    assert np.asarray(box.value).tobytes() == src.tobytes()
+    cp.close()
+
+
+def test_nested_invalidation_survives_topology_change(tmp_path):
+    """A parent publish on topology A wipes the child from *every* node
+    tree, so a later restore on topology B cannot resurrect it."""
+    env = _env(tmp_path, CRAFT_TIER_CHAIN="node")
+    # child written by both ranks of topology A, then rank 0's parent
+    # publishes — which must wipe the child from BOTH node trees
+    children = []
+    for rank in range(2):
+        child = Checkpoint("inner", FakeComm(rank, 2), env=env)
+        child.add("it", Box(5))
+        child.commit()
+        assert child.update_and_write()
+        children.append(child)
+    parent = Checkpoint("outer", FakeComm(0, 2), env=env)
+    parent.add("o", Box(1))
+    parent.commit()
+    parent.sub_cp(children[0])
+    assert parent.update_and_write()   # invalidates the child everywhere
+    parent.close()
+    for child in children:
+        child.close()
+    # topology B: nothing of the child is restorable from any node tree
+    for rank in range(3):
+        child = Checkpoint("inner", FakeComm(rank, 3), env=env)
+        child.add("it", Box(0))
+        child.commit()
+        assert not child.restart_if_needed()
+        child.close()

@@ -159,6 +159,86 @@ def test_version_monotonic_under_any_freq_pattern(tmp_path_factory, freqs):
     assert cp._pfs.latest_version() == cp.version
 
 
+# ------------------------------------------------- elastic reshard geometry
+@st.composite
+def _reshard_case(draw):
+    """A global shape, a disjoint source tiling (block decomposition over a
+    random axis and rank count), and an arbitrary destination sub-box."""
+    gshape = tuple(draw(st.lists(st.integers(1, 8), min_size=1, max_size=3)))
+    axis = draw(st.integers(0, len(gshape) - 1))
+    nsrc = draw(st.integers(1, 5))
+    dst = tuple(
+        sorted((draw(st.integers(0, s)), draw(st.integers(0, s))))
+        for s in gshape
+    )
+    return gshape, axis, nsrc, tuple((lo, hi) for lo, hi in dst)
+
+
+@_SETTINGS
+@given(case=_reshard_case(), seed=st.integers(0, 2 ** 31 - 1))
+def test_reshard_covers_every_byte_exactly_once(case, seed):
+    from repro.core import reshard
+    from repro.core.elastic import block_index
+
+    gshape, axis, nsrc, dst = case
+    rng = np.random.default_rng(seed)
+    src_arr = rng.integers(0, 255, gshape).astype(np.uint8)
+    sources = [
+        reshard.resolve_index(block_index(gshape, r, nsrc, axis=axis), gshape)
+        for r in range(nsrc)
+    ]
+    # exactly-once: every destination element is written by exactly one run
+    counts = np.zeros(reshard.extent_size(dst), dtype=np.int64)
+    for src in sources:
+        for _, doff, ln in reshard.overlap_runs(src, dst):
+            counts[doff:doff + ln] += 1
+    assert (counts == 1).all()
+
+    # assembly equals the source array's sub-box
+    def open_reader(key):
+        ext = key
+        block = src_arr[tuple(slice(lo, hi) for lo, hi in ext)]
+        flat = np.ascontiguousarray(block).reshape(-1).view(np.uint8)
+
+        class _R:
+            def read(self, start, stop):
+                return memoryview(flat.tobytes())[start:stop]
+        return _R()
+
+    block, covered = reshard.assemble_extent(
+        dst, np.uint8, [(s, s) for s in sources], open_reader)
+    if covered is not None:
+        assert covered.all()
+        np.testing.assert_array_equal(
+            block, src_arr[tuple(slice(lo, hi) for lo, hi in dst)])
+
+
+@_SETTINGS
+@given(
+    payload=st.binary(min_size=0, max_size=200),
+    chunk_bytes=st.integers(1, 64),
+    codec=st.sampled_from([0, 1]),
+    ranges=st.lists(
+        st.tuples(st.integers(0, 200), st.integers(0, 200)),
+        min_size=1, max_size=6),
+)
+def test_chunk_range_reader_equals_full_read(
+        tmp_path_factory, payload, chunk_bytes, codec, ranges):
+    from repro.core.cpbase import IOContext
+    from repro.core.storage import ChunkRangeReader, write_array
+
+    tmp = tmp_path_factory.mktemp("crr")
+    arr = np.frombuffer(payload, dtype=np.uint8)
+    ctx = IOContext(codec_version=codec, chunk_bytes=chunk_bytes)
+    path = tmp / "a.bin"
+    write_array(path, arr, ctx)
+    rdr = ChunkRangeReader(path, ctx)
+    assert rdr.nbytes == len(payload)
+    for lo, hi in ranges:
+        lo, hi = sorted((min(lo, len(payload)), min(hi, len(payload))))
+        assert bytes(rdr.read(lo, hi)) == payload[lo:hi]
+
+
 # ------------------------------------------------------------- adamw
 @_SETTINGS
 @given(bits=st.sampled_from([32, 8]), seed=st.integers(0, 2 ** 31 - 1))
