@@ -1,0 +1,168 @@
+"""Chaos soak: a seeded fault schedule hammering the tier chain for a fixed
+wall-clock budget, ending in a verified bit-identical restore.
+
+The soak drives a delta-coded, async checkpoint loop on a node+pfs chain
+while a deterministic schedule of fault windows (transient EIO bursts, a
+persistent PFS outage with breaker re-admission, torn writes, ENOSPC, and
+latency stalls) opens and closes around it.  At the end every fault is
+cleared, one final full write fences, and a *fresh* Checkpoint (separate
+store objects, no shared state) restores and compares bit-for-bit.
+
+Scenarios
+---------
+soak      seeded fault soak (default 60 s; CRAFT_SOAK_SECONDS overrides,
+          ``--full`` doubles it) ending with a verified restore
+overhead  fault-free write-path overhead of the chaos/retry/breaker
+          machinery: hooks armed-but-idle vs compiled out entirely
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import emit, run_scenarios
+from repro.core import Checkpoint
+from repro.core.env import CraftEnv
+
+_MB = 1 << 20
+
+# (start_frac, end_frac, spec) — fractions of the soak budget.  The windows
+# deliberately overlap tier outages with transient noise on the other tier.
+_SCHEDULE = [
+    (0.05, 0.20, "pfs:eio:p=0.3"),                 # transient PFS noise
+    (0.25, 0.50, "pfs:erofs:p=1"),                 # hard PFS outage
+    (0.30, 0.45, "node:eio:p=0.15"),               # noise on the fallback
+    (0.55, 0.65, "node:stall:ms=25+p=0.5"),        # slow node tier
+    (0.70, 0.80, "pfs:torn:p=0.4"),                # torn PFS writes
+    (0.85, 0.90, "pfs:enospc:count=2"),            # space pressure
+]
+
+
+def _mk_env(base: Path, seed: int) -> CraftEnv:
+    return CraftEnv.capture({
+        "CRAFT_CP_PATH": str(base / "pfs"),
+        "CRAFT_NODE_CP_PATH": str(base / "node"),
+        "CRAFT_CHAOS": "on",
+        "CRAFT_CHAOS_SEED": str(seed),
+        "CRAFT_DELTA": "1",
+        "CRAFT_WRITE_ASYNC": "1",
+        "CRAFT_IO_RETRIES": "2",
+        "CRAFT_IO_BACKOFF_MS": "5",
+        "CRAFT_IO_DEADLINE_S": "20",
+        "CRAFT_BREAKER_THRESHOLD": "2",
+        "CRAFT_BREAKER_COOLDOWN_S": "1",
+        "CRAFT_KEEP_VERSIONS": "3",
+    })
+
+
+def soak(full: bool) -> None:
+    seconds = float(os.environ.get("CRAFT_SOAK_SECONDS",
+                                   "120" if full else "60"))
+    seed = int(os.environ.get("CRAFT_CHAOS_SEED", "1234"))
+    rng = np.random.default_rng(seed)
+    base = Path(tempfile.mkdtemp(prefix="craft-chaos-soak-"))
+    arr = rng.standard_normal((4 * _MB // 8,))     # 4 MiB of float64
+
+    cp = Checkpoint("soak", env=_mk_env(base, seed))
+    cp.add("state", arr)
+    cp.commit()
+    engine = cp.chaos
+
+    t0 = time.perf_counter()
+    active = [False] * len(_SCHEDULE)
+    writes = failures = 0
+    while (now := time.perf_counter() - t0) < seconds:
+        frac = now / seconds
+        for i, (lo, hi, spec) in enumerate(_SCHEDULE):
+            if not active[i] and lo <= frac < hi:
+                engine.add(spec)
+                active[i] = True
+            elif active[i] and frac >= hi:
+                fault = spec.split(":")[1]
+                engine.clear(spec.split(":")[0], fault)
+                active[i] = False
+        # one "training step": mutate a slice, then checkpoint
+        at = rng.integers(0, arr.size - 1024)
+        arr[at:at + 1024] = rng.standard_normal(1024)
+        try:
+            cp.update_and_write()
+            writes += 1
+        except Exception:
+            failures += 1          # all-tiers-down window: survive, go on
+        time.sleep(0.01)
+
+    engine.clear()                 # calm seas for the final fence
+    arr[:1024] = np.arange(1024, dtype=arr.dtype)
+    cp.update_and_write()
+    cp.wait()
+    final = arr.copy()
+    version = cp.version
+    st = dict(cp.stats)
+    cp.close()
+
+    # fresh process analog: new Checkpoint, new stores, restore + compare
+    out = np.zeros_like(final)
+    cp2 = Checkpoint("soak", env=_mk_env(base, seed))
+    cp2.add("state", out)
+    cp2.commit()
+    restored = cp2.restart_if_needed()
+    identical = bool(restored and np.array_equal(out, final))
+    cp2.close()
+    shutil.rmtree(base, ignore_errors=True)
+
+    emit("chaos_soak", "soak_seconds", round(seconds, 1), "s", seed=seed)
+    emit("chaos_soak", "writes_ok", writes, "count")
+    emit("chaos_soak", "writes_failed", failures, "count")
+    emit("chaos_soak", "final_version", version, "version")
+    emit("chaos_soak", "injections", sum(
+        v for k, v in engine.stats.items() if k != "ops"), "count")
+    for key in ("retries", "breaker_trips", "degraded_writes",
+                "abandoned_writes", "enospc_retires"):
+        emit("chaos_soak", key, st.get(key, 0), "count")
+    emit("chaos_soak", "restore_bit_identical", int(identical), "bool")
+    if not identical:
+        raise SystemExit("chaos soak FAILED: restore not bit-identical")
+
+
+def overhead(full: bool) -> None:
+    """Fault-free cost of the resilience machinery on the write path."""
+    n_iter = 40 if full else 15
+    arr = np.random.default_rng(0).standard_normal((8 * _MB // 8,))
+
+    def loop(extra: dict) -> float:
+        base = Path(tempfile.mkdtemp(prefix="craft-chaos-ovh-"))
+        env = CraftEnv.capture({
+            "CRAFT_CP_PATH": str(base / "pfs"),
+            "CRAFT_USE_SCR": "0",
+            **extra,
+        })
+        cp = Checkpoint("ovh", env=env)
+        cp.add("state", arr)
+        cp.commit()
+        cp.update_and_write()              # warm the path
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            arr[:64] += 1.0
+            cp.update_and_write()
+        dt = time.perf_counter() - t0
+        cp.close()
+        shutil.rmtree(base, ignore_errors=True)
+        return dt / n_iter
+
+    bare = loop({})
+    armed = loop({"CRAFT_CHAOS": "on", "CRAFT_IO_RETRIES": "2",
+                  "CRAFT_IO_DEADLINE_S": "60"})
+    pct = 100.0 * (armed - bare) / bare if bare else 0.0
+    emit("chaos_soak", "write_s_bare", round(bare, 5), "s/write")
+    emit("chaos_soak", "write_s_armed", round(armed, 5), "s/write")
+    emit("chaos_soak", "armed_overhead", round(pct, 2), "%")
+
+
+if __name__ == "__main__":
+    run_scenarios({"soak": soak, "overhead": overhead},
+                  default=soak)

@@ -51,6 +51,7 @@ class AsyncWriter:
         self._name = name
         self._pin = tuple(pin_cpulist)
         self._error: Optional[BaseException] = None
+        self._error_label: Optional[str] = None
         self._pending = 0
         self._cv = threading.Condition()
         # ordered lane (sequencer)
@@ -101,15 +102,17 @@ class AsyncWriter:
     def _seq_loop(self) -> None:
         self._apply_pin()
         while True:
-            job = self._queue.get()
-            if job is None:
+            item = self._queue.get()
+            if item is None:
                 return
+            job, label = item
             t0 = time.perf_counter()
             try:
                 job()
             except BaseException as exc:  # surfaced at next wait()/submit()
                 with self._cv:
                     self._error = exc
+                    self._error_label = label
             finally:
                 dt = time.perf_counter() - t0
                 with self._cv:
@@ -128,15 +131,21 @@ class AsyncWriter:
             task()  # drain-helpers never raise (errors collected per group)
 
     # -- ordered lane ----------------------------------------------------------
-    def submit(self, job: Callable[[], None]) -> None:
-        """Enqueue a job on the ordered lane (strict submission order)."""
+    def submit(self, job: Callable[[], None],
+               label: Optional[str] = None) -> None:
+        """Enqueue a job on the ordered lane (strict submission order).
+
+        ``label`` names the job in the error surfaced at a later
+        ``wait()``/``submit()`` — without it an async failure reports only
+        the exception, with no hint which version/tier it came from.
+        """
         self._raise_pending_error()
         self._ensure_seq_started()
         with self._cv:
             self._pending += 1
             if self._pending > self.stats["max_pending"]:
                 self.stats["max_pending"] = self._pending
-        self._queue.put(job)
+        self._queue.put((job, label))
 
     def wait(self) -> None:
         """Block until all submitted jobs finished; re-raise writer errors."""
@@ -234,5 +243,16 @@ class AsyncWriter:
     def _raise_pending_error(self) -> None:
         with self._cv:
             err, self._error = self._error, None
+            label, self._error_label = self._error_label, None
         if err is not None:
+            # Deferred surfacing loses the call-site context, so attach the
+            # job's identity.  OSErrors propagate unwrapped — callers match
+            # on their type/errno, and the storage layer already embedded
+            # tier/version/array context in the message at the fault site.
+            if label and not isinstance(err, OSError):
+                from repro.core.cpbase import CheckpointError
+
+                raise CheckpointError(
+                    f"async checkpoint write failed ({label}): {err}"
+                ) from err
             raise err

@@ -42,6 +42,8 @@ on the writer thread and the caller must ``wait()`` before mutating the data.
 from __future__ import annotations
 
 import dataclasses
+import errno
+import os
 import time
 from pathlib import Path
 from typing import Dict, Optional
@@ -89,6 +91,10 @@ class Checkpoint:
         self._policy = None
         self._scrubber = None
         self._decision_cache = None   # (iteration, version, Decision)
+        # resilience plane: the fault injector (CRAFT_CHAOS, None when off)
+        # and per-slot circuit breakers (core/health.py), built at commit()
+        self._chaos = None
+        self._health: Dict[str, object] = {}
         # Per-tier-slot delta state: the chunk manifests of the last version
         # written to (or restored from) that tier, diffed against at the next
         # write.  {"version", "deps": set, "files": {rel: manifest}}
@@ -116,6 +122,16 @@ class Checkpoint:
             "preempt_flushes": 0,     # CRAFT_CP_SIGNAL-triggered sync flushes
             "final_writes": 0,        # walltime-guard final full checkpoints
             "read_repairs": 0,        # restores saved by repair-on-read
+            "retries": 0,             # transient IO errors absorbed by the
+                                      # retry/backoff layer (CRAFT_IO_RETRIES)
+            "breaker_trips": 0,       # circuit-breaker CLOSED/HALF_OPEN→OPEN
+                                      # transitions across all tiers
+            "degraded_writes": 0,     # scheduled tier writes skipped or lost
+                                      # to a fault and routed down the chain
+            "abandoned_writes": 0,    # hung writes cut off by the
+                                      # CRAFT_IO_DEADLINE_S watchdog
+            "enospc_retires": 0,      # emergency retention squeezes that
+                                      # freed space for a write in flight
         }
 
     # ------------------------------------------------------------------ add
@@ -187,6 +203,23 @@ class Checkpoint:
                 pin_cpulist=self.env.async_thread_pin_cpulist,
                 name=f"craft-writer-{self.name}",
             )
+        if self.env.chaos:
+            from repro.core.chaos import ChaosEngine
+
+            self._chaos = ChaosEngine(self.env.chaos, seed=self.env.chaos_seed)
+            for store, slot, _ in self._chained_stores():
+                store.chaos_scope = self._chaos.scope(slot)
+        from repro.core.health import TierHealth
+
+        self._health = {
+            slot: TierHealth(
+                slot,
+                threshold=self.env.breaker_threshold,
+                cooldown_s=self.env.breaker_cooldown_s,
+                clock=self._clock,
+            )
+            for _, slot, _ in self._chained_stores()
+        }
         from repro.core.scheduler import CheckpointPolicy
 
         stores = {slot: store for store, slot, _ in self._chained_stores()}
@@ -267,12 +300,14 @@ class Checkpoint:
             # zero-copy: snapshot *and* IO on the writer thread; the caller
             # must wait() before mutating live data (paper §2.4).
             self._writer.submit(
-                lambda v=version, d=decision: self._snapshot_and_write(v, d))
+                lambda v=version, d=decision: self._snapshot_and_write(v, d),
+                label=f"{self.name} v-{version}")
         elif self.env.write_async:
             # copy-based: snapshot inline (cheap D2H), IO on writer thread.
             self._update_all()
             self._writer.submit(
-                lambda v=version, d=decision: self._write_version(v, d))
+                lambda v=version, d=decision: self._write_version(v, d),
+                label=f"{self.name} v-{version}")
         else:
             # synchronous: IO inline — the writer (if any) only serves
             # run_parallel fanout of per-array/per-chunk jobs.
@@ -348,6 +383,21 @@ class Checkpoint:
         self._write_version(version, decision)
 
     def _write_version(self, version: int, decision=None) -> None:
+        """Write ``version`` to the scheduled tiers, degrading around faults.
+
+        Per tier: an open circuit breaker skips the tier outright; a write
+        failure (after the storage layer's transient retries) records a
+        breaker failure and, either way, the tier's payload is *routed* to
+        the next chain level so the version still lands somewhere durable.
+        A degraded tier's delta state is dropped — its next successful write
+        (breaker re-admission) is forced full, so no delta chain ever spans
+        an outage.  ``ENOSPC`` gets one emergency retention squeeze + retry
+        before degrading.  Only when *no* tier lands does the last error
+        propagate (the caller keeps the previous version; the in-memory
+        version counter does not advance).
+        """
+        from repro.core import health as health_mod
+        from repro.core.chaos import ChaosCrash
         from repro.core.mem_level import MemTierError
 
         t0 = time.perf_counter()
@@ -366,32 +416,105 @@ class Checkpoint:
             slots = {s for _, s, _ in self._chained_stores()
                      if s != "pfs" or to_pfs}
             force_full = False
+        # cheap half-open probes first: a tripped tier past its cooldown is
+        # re-admitted (or re-opened) by a metadata touch, never by gambling
+        # the full version write below.  Degraded slots keep the policy
+        # always-due, so the scrubber's idle windows cannot reach a tripped
+        # tier — the front of the write is its other probe ride.
+        self._probe_tiers()
+        landed = []
+        routed = False        # a shallower tier's payload needs a new home
+        last_exc: Optional[BaseException] = None
         for store, slot, _ in self._chained_stores():
-            if slot not in slots:
+            if slot not in slots and not routed:
                 continue
+            health = self._health.get(slot)
+            if health is not None and not health.allow():
+                # breaker open: skip without touching the (known-bad) tier
+                self._note_degraded(slot)
+                routed = True
+                continue
+            # a degraded slot's next write is self-contained (no delta base
+            # from before the outage) — force full for routed targets too
+            tier_full = force_full or routed or slot not in slots
             ts = time.perf_counter()
-            if slot == "mem":
+            try:
+                self._write_store_guarded(store, version, slot, tier_full)
+            except MemTierError:
                 # the RAM tier is best-effort write-through: a collective
                 # budget refusal skips it, the durable tiers still land
-                try:
-                    self._write_to_store(store, version, slot, force_full)
-                    self.stats["mem_writes"] += 1
-                except MemTierError:
-                    self.stats["mem_skipped"] += 1
+                self.stats["mem_skipped"] += 1
+                continue
+            except ChaosCrash:
+                raise             # simulated process death: no cleanup
+            except Exception as exc:
+                if isinstance(exc, OSError) and exc.errno == errno.ENOSPC \
+                        and getattr(store, "retire_for_space",
+                                    lambda: False)():
+                    self.stats["enospc_retires"] += 1
+                    try:
+                        self._write_store_guarded(
+                            store, version, slot, tier_full)
+                    except ChaosCrash:
+                        raise
+                    except Exception as exc2:
+                        exc = exc2
+                    else:
+                        exc = None
+                if exc is not None:
+                    last_exc = exc
+                    if isinstance(exc, health_mod.WriteDeadlineExceeded):
+                        self.stats["abandoned_writes"] += 1
+                    if health is not None and health.record_failure(exc):
+                        self.stats["breaker_trips"] += 1
+                    self._note_degraded(slot)
+                    routed = True
                     continue
-            elif slot == "node":
-                self._write_to_store(store, version, slot, force_full)
-                self.stats["node_writes"] += 1
-            else:
-                self._write_to_store(store, version, slot, force_full)
-                self.stats["pfs_writes"] += 1
+            # tier write landed
+            if health is not None:
+                health.record_success()
+            if self._policy is not None:
+                self._policy.note_tier_written(slot)
+            landed.append(slot)
+            routed = False
+            self.stats[f"{slot}_writes"] += 1
             # feed the scheduler's per-tier cost model (EWMA on the tier)
             store.record_write(time.perf_counter() - ts, wrote_bytes)
+        if not landed and last_exc is not None:
+            # nothing landed anywhere: surface the failure unchanged so the
+            # caller sees the original error type (and the version counter
+            # stays on the last complete version)
+            raise last_exc
         # Parent published ⇒ children are now inconsistent (paper Table 1).
         nested.GLOBAL_REGISTRY.invalidate_children(self)
         self.stats["writes"] += 1
         self.stats["bytes_written"] += wrote_bytes
         self.stats["write_seconds"] += time.perf_counter() - t0
+
+    def _note_degraded(self, slot: str) -> None:
+        """Bookkeeping for a tier write that did not land on its tier."""
+        self.stats["degraded_writes"] += 1
+        # no delta chain crosses an outage: the tier's next successful
+        # write diffs against nothing, i.e. is a forced full write
+        self._delta_state.pop(slot, None)
+        if self._policy is not None:
+            self._policy.note_degraded(slot)
+
+    def _write_store_guarded(self, store, version: int, slot: str,
+                             force_full: bool) -> None:
+        """One tier write, under the ``CRAFT_IO_DEADLINE_S`` watchdog: a
+        write that exceeds the deadline is abandoned (the helper thread may
+        stay hung; it can only abort its own staging dir, never publish)
+        instead of wedging the sequencer or a sync commit."""
+        deadline = self.env.io_deadline_s
+        if deadline > 0:
+            from repro.core.health import call_with_deadline
+
+            call_with_deadline(
+                lambda: self._write_to_store(store, version, slot, force_full),
+                deadline, name=f"{self.name} {slot} v-{version}")
+        else:
+            self._write_to_store(store, version, slot, force_full)
 
     def _delta_plan(self, slot: str, force_full: bool = False) -> Optional[dict]:
         """Delta state to diff against for this write, or None for a full
@@ -438,6 +561,9 @@ class Checkpoint:
                 zstd_level=self.env.zstd_level,
                 zstd_gate_bits=self.env.zstd_gate_bits,
                 device_meta={} if self.env.device_snapshot else None,
+                chaos=getattr(store, "chaos_scope", None),
+                io_retries=self.env.io_retries,
+                io_retry_backoff_ms=self.env.io_backoff_ms,
             )
             overrides = store.write_ctx_overrides()
             if overrides:
@@ -449,7 +575,9 @@ class Checkpoint:
             for key, item in self._map.items():
                 sub = staged / key
                 sub.mkdir(parents=True, exist_ok=True)
-                jobs.append(lambda item=item, sub=sub: item.write(sub, ctx))
+                jobs.append(
+                    lambda item=item, sub=sub, key=key:
+                    self._run_item_write(item, sub, ctx, slot, version, key))
             storage.run_jobs(jobs, ctx)
             deps: set = set()
             if delta_on:
@@ -464,6 +592,7 @@ class Checkpoint:
                 storage.write_json(
                     staged / tiers.delta_deps_name(self.comm.rank),
                     {"version": version, "deps": sorted(deps)},
+                    ctx=ctx,
                 )
             store.publish(
                 staged,
@@ -477,8 +606,15 @@ class Checkpoint:
                     **({"delta_deps": sorted(deps)} if delta_on else {}),
                 },
             )
-        except BaseException:
-            store.abort(staged)
+        except BaseException as exc:
+            from repro.core.chaos import ChaosCrash
+
+            # a simulated process death leaves its staging dir behind — the
+            # crash-consistency protocol (tmp sweep on next start) owns the
+            # cleanup, exactly as after a real crash
+            if not isinstance(exc, ChaosCrash):
+                store.abort(staged)
+            self.stats["retries"] += io_stats.get("retries", 0)
             raise
         if delta_on:
             self._delta_state[slot] = {
@@ -487,6 +623,26 @@ class Checkpoint:
         self.stats["tier_bytes_written"] += io_stats.get("bytes", 0)
         self.stats["delta_chunks_total"] += io_stats.get("chunks", 0)
         self.stats["delta_chunks_skipped"] += io_stats.get("ref_chunks", 0)
+        self.stats["retries"] += io_stats.get("retries", 0)
+
+    def _run_item_write(self, item, sub: Path, ctx: IOContext,
+                        slot: str, version: int, key: str) -> None:
+        """One checkpointable's write with failure context attached: the
+        tier, version and array id ride along on the re-raised error (an
+        async failure otherwise surfaces at a later fence with no hint
+        where it happened).  OSError keeps its type and errno — callers
+        dispatch on them (transient retry, ENOSPC handling)."""
+        try:
+            item.write(sub, ctx)
+        except OSError as exc:
+            msg = (f"{slot} tier v-{version} array {key!r}: "
+                   f"{exc.strerror or exc}")
+            wrapped = type(exc)(exc.errno, msg) if exc.errno is not None \
+                else type(exc)(msg)
+            raise wrapped from exc
+        except CheckpointError as exc:
+            raise type(exc)(
+                f"{slot} tier v-{version} array {key!r}: {exc}") from exc
 
     # ----------------------------------------------------------------- read
     def restart_if_needed(self, iteration_box=None) -> bool:
@@ -613,6 +769,9 @@ class Checkpoint:
             return f"{label}: v-{version} {exc}"
         overrides = dict(store.read_ctx_overrides(version))
         overrides.setdefault("rel_root", Path(vdir))
+        overrides.setdefault("chaos", getattr(store, "chaos_scope", None))
+        overrides.setdefault("io_retries", self.env.io_retries)
+        overrides.setdefault("io_retry_backoff_ms", self.env.io_backoff_ms)
         if base_dirs:
             overrides.setdefault("base_dirs", base_dirs)
         # Elastic N→M: peer version roots this tier can reach (node tier on a
@@ -634,8 +793,10 @@ class Checkpoint:
                 ],
                 ctx,
             )
-        except CheckpointError as exc:
+        except (CheckpointError, OSError) as exc:
+            self.stats["retries"] += (ctx.io_stats or {}).get("retries", 0)
             return f"{label}: {exc}"
+        self.stats["retries"] += (ctx.io_stats or {}).get("retries", 0)
         self.stats["restore_tier"] = label
         self.stats["tier_reads"][label] = \
             self.stats["tier_reads"].get(label, 0) + 1
@@ -743,6 +904,55 @@ class Checkpoint:
             if not (vdir / rel).exists()
         ]
 
+    # ------------------------------------------------------- health probing
+    def _probe_tiers(self) -> None:
+        """Half-open probes for tripped tiers, ridden on the scrubber's idle
+        windows: a cheap touch/fsync/unlink in the tier root (the chaos gate
+        sees it as a write, so a still-faulty tier fails the probe) decides
+        re-admission without risking a real version write."""
+        for store, slot, _ in self._chained_stores():
+            health = self._health.get(slot)
+            if health is None or not health.probe_due():
+                continue
+            if not health.allow():       # another probe is already in flight
+                continue
+            try:
+                self._probe_store(store, slot)
+            except Exception as exc:
+                if health.record_failure(exc):
+                    self.stats["breaker_trips"] += 1
+            else:
+                health.record_success()
+
+    def _probe_store(self, store, slot: str) -> None:
+        scope = getattr(store, "chaos_scope", None)
+        if scope is not None:
+            scope.check("write", path="<health-probe>")
+        if slot == "mem":
+            return                       # RAM fabric: the gate is the probe
+        root = Path(store.version_dir(0)).parent
+        root.mkdir(parents=True, exist_ok=True)
+        probe = root / f".probe-{self.comm.rank}"
+        try:
+            with open(probe, "wb") as fh:
+                fh.write(b"craft-probe")
+                fh.flush()
+                os.fsync(fh.fileno())
+        finally:
+            probe.unlink(missing_ok=True)
+
+    @property
+    def chaos(self):
+        """The live :class:`~repro.core.chaos.ChaosEngine` (``None`` unless
+        ``CRAFT_CHAOS`` armed one at commit) — tests and soak harnesses add
+        or clear fault rules on it mid-run."""
+        return self._chaos
+
+    @property
+    def health(self) -> Dict[str, object]:
+        """Per-slot :class:`~repro.core.health.TierHealth` (breaker state)."""
+        return self._health
+
     # ----------------------------------------------------------------- misc
     @property
     def version(self) -> int:
@@ -768,6 +978,10 @@ class Checkpoint:
             return
         if self._policy is not None:
             self._policy.uninstall_signal_handlers()
+        if self._chaos is not None:
+            # unblock injected hangs so abandoned writer threads can die
+            # (they fail their op and abort their staging; never publish)
+            self._chaos.release()
         if self._writer is not None:
             self._writer.close()
         self._closed = True

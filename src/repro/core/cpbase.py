@@ -105,6 +105,16 @@ class IOContext:
     # that the chunk grid matches (a tier override of ``chunk_bytes`` or a
     # reshaped array falls back to the host path transparently).
     device_meta: Optional[dict] = None
+    # --- resilient IO (CRAFT_CHAOS / CRAFT_IO_RETRIES) ----------------------
+    # Fault-injection scope for the tier this context writes/reads
+    # (``chaos.ChaosScope`` or None): the file helpers in ``storage.py`` call
+    # ``chaos.check("write"/"read", ...)`` before touching the filesystem and
+    # honor ``chaos.torn_limit`` for partial-write injection.
+    chaos: Optional[object] = None
+    # Transient-error retry budget per file operation (exponential backoff
+    # with jitter, base delay ``io_retry_backoff_ms``); 0 = fail fast.
+    io_retries: int = 0
+    io_retry_backoff_ms: float = 25.0
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
     )
@@ -154,6 +164,13 @@ class IOContext:
                 self.io_stats["ref_chunks"] = (
                     self.io_stats.get("ref_chunks", 0) + ref_chunks
                 )
+
+    def record_retry(self) -> None:
+        """Account one transient-error retry (surfaces in
+        ``Checkpoint.stats['retries']``)."""
+        if self.io_stats is not None:
+            with self._lock:
+                self.io_stats["retries"] = self.io_stats.get("retries", 0) + 1
 
     def record_read(self, nbytes: int) -> None:
         """Account payload bytes physically fetched at restore (range reads

@@ -138,6 +138,29 @@ class CraftEnv:
                                      # throttle — bytes verified per second,
                                      # accumulated between slices
                                      # (0 = unthrottled)
+    # --- chaos + resilient IO (core/chaos.py / core/health.py) -------------
+    chaos: str                       # CRAFT_CHAOS: fault-injection spec,
+                                     # "slot:fault:k=v+k=v,..." rules (or
+                                     # "on" to arm the engine with no rules;
+                                     # empty = chaos off)
+    chaos_seed: int                  # CRAFT_CHAOS_SEED: seed for the
+                                     # per-operation injection RNG so fault
+                                     # schedules replay bit-identically
+    io_retries: int                  # CRAFT_IO_RETRIES: retry attempts for
+                                     # transient tier IO errors (EIO/EAGAIN/
+                                     # EINTR/ETIMEDOUT) per operation
+    io_backoff_ms: float             # CRAFT_IO_BACKOFF_MS: base retry delay,
+                                     # doubled per attempt with +-50% jitter
+    io_deadline_s: float             # CRAFT_IO_DEADLINE_S: wall-clock budget
+                                     # per tier write before it is abandoned
+                                     # as hung (0 = no deadline)
+    breaker_threshold: int           # CRAFT_BREAKER_THRESHOLD: consecutive
+                                     # tier failures before its circuit
+                                     # breaker opens and writes degrade to
+                                     # the next chain level
+    breaker_cooldown_s: float        # CRAFT_BREAKER_COOLDOWN_S: seconds an
+                                     # open breaker waits before admitting a
+                                     # half-open health probe
 
     def tier_every_for(self, slot: str):
         """Cadence spec for a chain slot: int count, "auto", or None (legacy).
@@ -241,6 +264,27 @@ class CraftEnv:
         if scrub_bytes_per_s < 0:
             raise ValueError(
                 f"CRAFT_SCRUB_BYTES_PER_S={scrub_bytes_per_s!r}")
+        chaos = env.get("CRAFT_CHAOS", "").strip()
+        if chaos:
+            # validate eagerly so typos fail at capture, not mid-write
+            from repro.core.chaos import parse_chaos_spec
+            parse_chaos_spec(chaos)
+        chaos_seed = int(env.get("CRAFT_CHAOS_SEED", "0"))
+        io_retries = int(env.get("CRAFT_IO_RETRIES", "2"))
+        if io_retries < 0:
+            raise ValueError(f"CRAFT_IO_RETRIES={io_retries!r}")
+        io_backoff_ms = float(env.get("CRAFT_IO_BACKOFF_MS", "25"))
+        if io_backoff_ms < 0:
+            raise ValueError(f"CRAFT_IO_BACKOFF_MS={io_backoff_ms!r}")
+        io_deadline_s = float(env.get("CRAFT_IO_DEADLINE_S", "0"))
+        if io_deadline_s < 0:
+            raise ValueError(f"CRAFT_IO_DEADLINE_S={io_deadline_s!r}")
+        breaker_threshold = int(env.get("CRAFT_BREAKER_THRESHOLD", "3"))
+        if breaker_threshold < 1:
+            raise ValueError(f"CRAFT_BREAKER_THRESHOLD={breaker_threshold!r}")
+        breaker_cooldown_s = float(env.get("CRAFT_BREAKER_COOLDOWN_S", "30"))
+        if breaker_cooldown_s < 0:
+            raise ValueError(f"CRAFT_BREAKER_COOLDOWN_S={breaker_cooldown_s!r}")
         io_workers_raw = env.get("CRAFT_IO_WORKERS")
         if io_workers_raw is None:
             io_workers = min(4, os.cpu_count() or 1)
@@ -287,6 +331,13 @@ class CraftEnv:
             cp_signal=cp_signal,
             scrub_every=scrub_every,
             scrub_bytes_per_s=scrub_bytes_per_s,
+            chaos=chaos,
+            chaos_seed=chaos_seed,
+            io_retries=io_retries,
+            io_backoff_ms=io_backoff_ms,
+            io_deadline_s=io_deadline_s,
+            breaker_threshold=breaker_threshold,
+            breaker_cooldown_s=breaker_cooldown_s,
         )
 
 

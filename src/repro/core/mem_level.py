@@ -430,6 +430,9 @@ class MemStore(StorageTier):
 
     def publish(self, staged: Path, version: int,
                 extra_meta: Optional[dict] = None) -> None:
+        # fabric coverage for the chaos engine: an injected fault here makes
+        # the RAM tier misbehave exactly like a failing fabric insert would
+        self._chaos_check("fabric", path=staged)
         files, decode_err = self._slurp(staged)
         nbytes = sum(e.nbytes for e in files.values())
         # replica-placement exchange: every rank learns every owner's payload

@@ -134,16 +134,20 @@ class NodeStore(StorageTier):
         self._local.abort(staged)
 
     def publish(self, staged: Path, version: int, extra_meta: Optional[dict] = None) -> None:
+        self._chaos_check("publish", path=staged)
         self.comm.barrier()          # all ranks wrote their node-local files
         if self.is_leader:
             self._local.publish(staged, version, extra_meta)
         self.comm.barrier()          # every node's v-<K> is complete
         if self.is_leader:
             if self.redundancy == "PARTNER" and self.n_nodes > 1:
+                self._chaos_check("replicate", path=staged)
                 self._publish_partner(version)
             elif self.redundancy == "XOR":
+                self._chaos_check("replicate", path=staged)
                 self._publish_xor(version)
             elif self.redundancy == "RS":
+                self._chaos_check("replicate", path=staged)
                 erasure.publish_rs(self, version)
         self.comm.barrier()          # redundancy data in place
 

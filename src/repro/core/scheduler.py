@@ -157,6 +157,11 @@ class CheckpointPolicy:
         self._deferred: set = set()           # count-cadence hits delayed by
         #                                       backpressure, owed at the next
         #                                       un-saturated opportunity
+        self._degraded: set = set()           # slots whose scheduled write was
+        #                                       degraded away (breaker open /
+        #                                       tier fault): owed every
+        #                                       opportunity until a write
+        #                                       actually lands there
         self._last_iteration: Optional[int] = None
         self._last_opportunity: Optional[int] = None
         self._last_tick_t: Optional[float] = None
@@ -376,6 +381,11 @@ class CheckpointPolicy:
         ticks = self._ticks
         due = []
         for slot in self._chain:
+            if slot in self._degraded:
+                # its last scheduled write never landed (routed to a deeper
+                # tier) — keep scheduling it until one does
+                due.append(slot)
+                continue
             spec = self._cadence[slot]
             if spec == "auto":
                 interval = self.interval_seconds(slot) * stretch
@@ -410,6 +420,10 @@ class CheckpointPolicy:
             return
         now = self._clock()
         for slot in decision.tiers:
+            if slot in self._degraded:
+                # the write was routed away from this tier — landing on a
+                # deeper tier must not satisfy this tier's cadence
+                continue
             self._last_write_t[slot] = now
             self._deferred.discard(slot)
         if decision.reason == "preempt":
@@ -420,6 +434,29 @@ class CheckpointPolicy:
             self.stats["final_writes"] += 1
         self._force_full = False
         self.stats["writes"] += 1
+
+    # ------------------------------------------- degraded-mode notifications
+    def note_degraded(self, slot: str) -> None:
+        """``Checkpoint`` degraded a scheduled write away from ``slot``
+        (circuit breaker open, or the tier write failed).  The slot becomes
+        overdue — and stays owed at every opportunity — until a write lands
+        on it again (:meth:`note_tier_written`)."""
+        if slot not in self._chain:
+            return
+        self._degraded.add(slot)
+        self._last_write_t[slot] = -math.inf
+
+    def note_tier_written(self, slot: str) -> None:
+        """A write actually landed on ``slot`` (called by ``Checkpoint`` on
+        tier-write success — the authoritative cadence reset, unlike
+        :meth:`record_written` which only sees the *scheduled* tier set)."""
+        self._degraded.discard(slot)
+        self._deferred.discard(slot)
+        if slot in self._last_write_t:
+            self._last_write_t[slot] = self._clock()
+
+    def degraded_slots(self) -> Tuple[str, ...]:
+        return tuple(s for s in self._chain if s in self._degraded)
 
     # ------------------------------------------------------------ internals
     def _emit(self, d: Decision) -> Decision:

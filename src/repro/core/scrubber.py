@@ -102,7 +102,11 @@ class Scrubber:
     # -------------------------------------------------------------- driving
     def opportunity(self) -> bool:
         """Idle-window hook (called by ``Checkpoint`` on every skip decision):
-        schedule one throttled scrub slice when the policy says it is due."""
+        schedule one throttled scrub slice when the policy says it is due.
+        Tripped-tier health probes ride the same idle windows — a half-open
+        circuit breaker (core/health.py) gets its cheap re-admission probe
+        here, outside the write path's critical section."""
+        self.cp._probe_tiers()
         policy = self.cp.policy
         if policy is None or not policy.scrub_due():
             return False

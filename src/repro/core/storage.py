@@ -49,6 +49,7 @@ Every file starts ``CRFT`` + u64(header_len) + JSON header.  The header's
 from __future__ import annotations
 
 import dataclasses
+import errno
 import json
 import os
 import shutil
@@ -179,6 +180,60 @@ def run_jobs(jobs, ctx: IOContext) -> list:
     return [job() for job in jobs]
 
 
+def _retrying(fn, ctx: IOContext):
+    """Run a file operation under the context's transient-retry policy."""
+    if not ctx.io_retries:
+        return fn()
+    from repro.core import health
+
+    return health.retry_call(fn, ctx.io_retries, ctx.io_retry_backoff_ms,
+                             on_retry=ctx.record_retry)
+
+
+def _atomic_write_file(path: Path, parts, ctx: IOContext) -> None:
+    """tmp → write parts → fsync → rename, with chaos + retry.
+
+    All fault handling for array/manifest payload files funnels through
+    here: the chaos gate runs per attempt (a ``count=N`` EIO rule is
+    consumed by retries), a ``torn`` rule writes only a byte prefix of the
+    tmp file and fails the attempt (the ``.tmp-`` name is the reason a torn
+    file can never be confused with a published one), and transient errors
+    retry with backoff.  Encoding happened before this call — retries redo
+    only the file IO, never the codec work.
+    """
+    total = sum(len(p) for p in parts)
+
+    def attempt():
+        if ctx.chaos is not None:
+            ctx.chaos.check("write", nbytes=total, path=path)
+        tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
+        torn = ctx.chaos.torn_limit(total) if ctx.chaos is not None else None
+        try:
+            with open(tmp, "wb") as fh:
+                if torn is not None:
+                    budget = torn
+                    for part in parts:
+                        cut = memoryview(part)[:budget]
+                        fh.write(cut)
+                        budget -= len(cut)
+                        if budget <= 0:
+                            break
+                    fh.flush()
+                    raise OSError(
+                        errno.EIO,
+                        f"chaos: torn write ({torn}/{total} bytes) {path}")
+                for part in parts:
+                    fh.write(part)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            tmp.unlink(missing_ok=True)
+            raise
+
+    _retrying(attempt, ctx)
+
+
 # --------------------------------------------------------------------------
 # array codec — v1 chunked writer, v0 legacy writer, version-dispatching reader
 # --------------------------------------------------------------------------
@@ -210,16 +265,12 @@ def _write_array_v0(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
         }
     ).encode()
     digest = zlib.crc32(payload) if ctx.checksum != "none" else 0
-    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
-    with open(tmp, "wb") as fh:
-        fh.write(_MAGIC)
-        fh.write(len(header).to_bytes(8, "little"))
-        fh.write(header)
-        fh.write(digest.to_bytes(8, "little"))
-        fh.write(payload)
-        fh.flush()
-        os.fsync(fh.fileno())
-    os.replace(tmp, path)
+    _atomic_write_file(
+        path,
+        [_MAGIC, len(header).to_bytes(8, "little"), header,
+         digest.to_bytes(8, "little"), payload],
+        ctx,
+    )
     ctx.record_checksum(_manifest_name(path, ctx), digest)
     ctx.record_io(len(payload), chunks=1)
 
@@ -286,16 +337,12 @@ def _write_array_v1(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
             "chunks": chunks_meta,
         }
     ).encode()
-    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
-    with open(tmp, "wb") as fh:
-        fh.write(_MAGIC)
-        fh.write(len(header).to_bytes(8, "little"))
-        fh.write(header)
-        for stored, _ in encoded:
-            fh.write(stored)
-        fh.flush()
-        os.fsync(fh.fileno())
-    os.replace(tmp, path)
+    _atomic_write_file(
+        path,
+        [_MAGIC, len(header).to_bytes(8, "little"), header,
+         *(stored for stored, _ in encoded)],
+        ctx,
+    )
     # whole-file digest for the manifest: fold per-chunk digests
     folded = 0
     for meta in chunks_meta:
@@ -386,17 +433,12 @@ def _write_array_v2(path: Path, arr: np.ndarray, ctx: IOContext) -> None:
             "chunks": chunks_meta,
         }
     ).encode()
-    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
-    with open(tmp, "wb") as fh:
-        fh.write(_MAGIC)
-        fh.write(len(header).to_bytes(8, "little"))
-        fh.write(header)
-        for stored, _ in encoded:
-            if stored is not None:
-                fh.write(stored)
-        fh.flush()
-        os.fsync(fh.fileno())
-    os.replace(tmp, path)
+    _atomic_write_file(
+        path,
+        [_MAGIC, len(header).to_bytes(8, "little"), header,
+         *(stored for stored, _ in encoded if stored is not None)],
+        ctx,
+    )
     # manifest digest: fold the raw digests (stable across literal/ref form)
     folded = 0
     for meta in chunks_meta:
@@ -433,19 +475,24 @@ def read_array(path: Path, ctx: IOContext) -> np.ndarray:
             return view
     if not path.exists():
         raise CheckpointError(f"missing checkpoint file {path}")
-    with open(path, "rb") as fh:
-        header = _parse_stream_header(fh, path)
-        fmt = header.get("fmt", CODEC_V0)
-        if fmt == CODEC_V0:
-            arr = _read_payload_v0(fh, header, path, ctx)
-        elif fmt == CODEC_V1:
-            arr = _read_payload_v1(fh, header, path, ctx)
-        elif fmt == CODEC_V2:
-            arr = _read_payload_v2(fh, header, path, ctx)
-        else:
+
+    def attempt():
+        if ctx.chaos is not None:
+            ctx.chaos.check("read", path=path)
+        with open(path, "rb") as fh:
+            header = _parse_stream_header(fh, path)
+            fmt = header.get("fmt", CODEC_V0)
+            if fmt == CODEC_V0:
+                return _read_payload_v0(fh, header, path, ctx)
+            if fmt == CODEC_V1:
+                return _read_payload_v1(fh, header, path, ctx)
+            if fmt == CODEC_V2:
+                return _read_payload_v2(fh, header, path, ctx)
             raise CheckpointError(
                 f"{path}: format v{fmt} is newer than this reader understands"
             )
+
+    arr = _retrying(attempt, ctx)
     ctx.record_read(int(arr.nbytes))
     return arr
 
@@ -898,13 +945,35 @@ class ChunkRangeReader:
         return data
 
 
-def write_json(path: Path, obj) -> None:
-    tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
-    with open(tmp, "w") as fh:
-        json.dump(obj, fh, indent=1)
-        fh.flush()
-        os.fsync(fh.fileno())
-    os.replace(tmp, path)
+def write_json(path: Path, obj, ctx: Optional[IOContext] = None) -> None:
+    """Atomic JSON write: tmp + fsync + rename + parent-dir fsync.
+
+    Manifests (``meta.json``, ``deltadeps-*.json``) gate restore decisions,
+    so they get the full durability treatment — including the directory
+    fsync that makes the rename itself crash-safe.  With a ``ctx`` the
+    write also runs under its chaos/retry policy like array payloads.
+    """
+    payload = json.dumps(obj, indent=1).encode()
+
+    def attempt():
+        if ctx is not None and ctx.chaos is not None:
+            ctx.chaos.check("write", nbytes=len(payload), path=path)
+        tmp = path.with_name(f".tmp-{path.name}-{uuid.uuid4().hex[:8]}")
+        try:
+            with open(tmp, "wb") as fh:
+                fh.write(payload)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            tmp.unlink(missing_ok=True)
+            raise
+        tiers.fsync_dir(path.parent)
+
+    if ctx is not None:
+        _retrying(attempt, ctx)
+    else:
+        attempt()
 
 
 def read_json(path: Path):
@@ -952,6 +1021,7 @@ class VersionStore(StorageTier):
         return tmp
 
     def publish(self, staged: Path, version: int, extra_meta: Optional[dict] = None) -> None:
+        self._chaos_check("publish", path=staged)
         self._barrier()  # every process finished writing its files
         if self._rank() == 0:
             tiers.atomic_publish_dir(staged, self.root / tiers.version_dir_name(version))
@@ -1021,3 +1091,15 @@ class VersionStore(StorageTier):
         meta = self.meta()
         meta["versions"] = kept
         write_json(self.root / "meta.json", meta)
+
+    def retire_for_space(self) -> bool:
+        """ENOSPC emergency: squeeze retention to the newest version (plus
+        pinned delta bases) and retract the dropped versions from meta."""
+        before = {v for v, _ in tiers.list_version_dirs(self.root)}
+        if len(before) <= 1:
+            return False
+        kept = tiers.retire_version_dirs(self.root, keep=1)
+        meta = self.meta()
+        meta["versions"] = kept
+        write_json(self.root / "meta.json", meta)
+        return set(kept) != before

@@ -46,6 +46,23 @@ def fsync_dir(path: Path) -> None:
         os.close(fd)
 
 
+def fsync_dir_tree(root: Path) -> None:
+    """fsync every directory under ``root`` (and root itself).
+
+    The durability half of the publish protocol: the staged tree's
+    *directory entries* must be on stable storage before the atomic rename
+    makes the version visible, or a power cut right after the rename can
+    leave a complete-looking ``v-<K>`` whose entries vanish on replay.
+    File *contents* are not re-synced here — every file in a staged tree
+    is written through ``storage._atomic_write_file`` / ``write_json``,
+    which fsync the payload before their own rename; repeating that per
+    file at publish forces one journal barrier each on ext4 and measurably
+    drags the write path.
+    """
+    for dirpath, _dirnames, _filenames in os.walk(root):
+        fsync_dir(Path(dirpath))
+
+
 def version_dir_name(version: int) -> str:
     return f"{_VERSION_PREFIX}{version}"
 
@@ -79,9 +96,13 @@ def list_version_dirs(root: Path) -> List[Tuple[int, Path]]:
 def atomic_publish_dir(staged: Path, final: Path) -> None:
     """Atomically promote a fully-written staging dir to its final name.
 
-    A pre-existing ``final`` (same-version re-write, e.g. a retry) is removed
-    first; the parent directory is fsync'd so the rename is durable.
+    The staged tree is fsync'd *before* the rename (payload + directory
+    entries must hit stable storage before the version becomes visible — the
+    rename is the commit point), a pre-existing ``final`` (same-version
+    re-write, e.g. a retry) is removed first, and the parent directory is
+    fsync'd after so the rename itself is durable.
     """
+    fsync_dir_tree(staged)
     if final.exists():
         shutil.rmtree(final)
     final.parent.mkdir(parents=True, exist_ok=True)
@@ -191,6 +212,17 @@ class StorageTier(abc.ABC):
     #: that one slow fsync does not thrash the schedule.
     COST_ALPHA = 0.3
 
+    #: Fault-injection scope (``chaos.ChaosScope``) bound by ``Checkpoint``
+    #: when ``CRAFT_CHAOS`` is armed; tier-level operations (publish,
+    #: redundancy replication, fabric inserts) gate through
+    #: :meth:`_chaos_check`, file IO goes through the scope on ``IOContext``.
+    chaos_scope = None
+
+    def _chaos_check(self, op: str, nbytes: int = 0, path=None) -> None:
+        scope = self.chaos_scope
+        if scope is not None:
+            scope.check(op, nbytes=nbytes, path=path)
+
     @abc.abstractmethod
     def stage(self, version: int) -> Path:
         """Create and return the staging directory for ``version``."""
@@ -253,6 +285,19 @@ class StorageTier(abc.ABC):
         just drops the directory; stores with version metadata override to
         also retract the version from their manifests."""
         shutil.rmtree(self.version_dir(version), ignore_errors=True)
+
+    def retire_for_space(self) -> bool:
+        """Emergency retention squeeze on ``ENOSPC``: drop every retired-
+        eligible version (keep only the newest + its pinned delta bases) to
+        free space for the write in flight.  Returns True when anything was
+        deleted.  Stores with version metadata override to also retract the
+        dropped versions from their manifests."""
+        root = self.version_dir(0).parent
+        before = {v for v, _ in list_version_dirs(root)}
+        if len(before) <= 1:
+            return False
+        kept = set(retire_version_dirs(root, keep=1))
+        return kept != before
 
     # -- per-tier write-cost reporting ---------------------------------------
     def record_write(self, seconds: float, nbytes: int = 0) -> None:
