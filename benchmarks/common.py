@@ -1,4 +1,5 @@
-"""Shared benchmark helpers: CSV emission + timing + JSON artifact dump."""
+"""Shared benchmark helpers: CSV emission + timing + JSON artifact dump +
+the ``BENCH_*.json`` record schema every artifact must satisfy."""
 from __future__ import annotations
 
 import json
@@ -7,6 +8,45 @@ from contextlib import contextmanager
 
 _ROWS = []
 _RECORDS = []
+
+#: Every ``BENCH_*.json`` artifact is a JSON array of records with at least
+#: these keys; ``value`` is a number or a short string, extra keys are
+#: free-form tags.  ``validate_records`` enforces it — both at dump time
+#: (a malformed artifact never uploads) and as a CI post-check over
+#: artifacts other tools produced (``python -m benchmarks.common FILE...``).
+REQUIRED_KEYS = ("bench", "name", "value", "unit")
+
+
+def validate_records(records) -> list:
+    """Schema errors in a BENCH record array (empty list = valid)."""
+    errors = []
+    if not isinstance(records, list):
+        return [f"artifact is {type(records).__name__}, expected a list"]
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            errors.append(f"record {i}: not an object")
+            continue
+        missing = [k for k in REQUIRED_KEYS if k not in rec]
+        if missing:
+            errors.append(f"record {i}: missing {missing}")
+            continue
+        for key in ("bench", "name", "unit"):
+            if not isinstance(rec[key], str):
+                errors.append(f"record {i}: {key!r} must be a string")
+        if not isinstance(rec["value"], (int, float, str)) \
+                or isinstance(rec["value"], bool):
+            errors.append(f"record {i}: 'value' must be a number or string")
+    return errors
+
+
+def validate_file(path: str) -> list:
+    """Schema errors for one ``BENCH_*.json`` file on disk."""
+    try:
+        with open(path) as fh:
+            records = json.load(fh)
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path}: unreadable ({exc})"]
+    return [f"{path}: {e}" for e in validate_records(records)]
 
 
 def emit(bench: str, name: str, value, unit: str, **extra) -> None:
@@ -20,6 +60,9 @@ def emit(bench: str, name: str, value, unit: str, **extra) -> None:
 
 def dump_json(path: str) -> None:
     """Write every record emitted so far as a JSON array (CI artifact)."""
+    errors = validate_records(_RECORDS)
+    if errors:
+        raise SystemExit("BENCH schema violation: " + "; ".join(errors[:5]))
     with open(path, "w") as fh:
         json.dump(_RECORDS, fh, indent=1)
     print(f"wrote {len(_RECORDS)} records to {path}", flush=True)
@@ -67,3 +110,18 @@ def run_scenarios(scenarios: dict, default, argv=None) -> None:
         default(run_full)
     if json_out:
         dump_json(json_out)
+
+
+if __name__ == "__main__":
+    # validate BENCH_*.json artifacts: python -m benchmarks.common FILE...
+    import sys as _sys
+
+    _paths = _sys.argv[1:]
+    if not _paths:
+        raise SystemExit("usage: python -m benchmarks.common BENCH_*.json...")
+    _errs = [e for p in _paths for e in validate_file(p)]
+    for _e in _errs:
+        print(_e, file=_sys.stderr)
+    if _errs:
+        raise SystemExit(1)
+    print(f"{len(_paths)} artifact(s) OK")

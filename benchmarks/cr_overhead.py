@@ -342,6 +342,72 @@ def device_snapshot(full: bool = False) -> None:
         shutil.rmtree(base, ignore_errors=True)
 
 
+def trace_overhead(full: bool = False) -> None:
+    """Armed vs off: the ``CRAFT_TRACE`` recorder on the hot write path.
+
+    The zero-overhead-when-unset contract is tested exactly (a disarmed
+    tracer is one dynamic no-op call); this scenario keeps the *armed*
+    cost on the scoreboard — same workload twice, once with ``CRAFT_TRACE``
+    pointed at a JSONL file and once without, reporting the runtime delta
+    and the recorder's per-event cost."""
+    from repro.core import trace as trace_mod
+
+    rng = np.random.default_rng(3)
+    mb = 8 if full else 4
+    n_iter = 120 if full else 60
+    arr = rng.standard_normal((mb * 1024 * 1024 // 4,)).astype(np.float32)
+
+    def run(label: str, base: Path, armed: bool):
+        envmap = {
+            "CRAFT_CP_PATH": str(base / label),
+            "CRAFT_USE_SCR": "0",
+            "CRAFT_TIER_EVERY": "pfs:5",
+        }
+        tpath = base / f"{label}.jsonl"
+        if armed:
+            envmap["CRAFT_TRACE"] = str(tpath)
+        env = CraftEnv.capture(envmap)
+        state = arr.copy()
+        cp = Checkpoint(f"trace_{label}", env=env)
+        cp.add("state", state)
+        cp.commit()
+        t0 = time.perf_counter()
+        try:
+            for it in range(n_iter):
+                state += 1.0
+                if cp.need_checkpoint(it):
+                    cp.update_and_write(it)
+            cp.wait()
+        finally:
+            cp.close()
+            trace_mod.uninstall()
+        wall = time.perf_counter() - t0
+        n_events = 0
+        if armed and tpath.exists():
+            n_events = sum(1 for ln in tpath.read_text().splitlines() if ln)
+        return wall, n_events
+
+    base = Path(tempfile.mkdtemp(prefix="craft-trace-"))
+    try:
+        # off-then-armed, best of 2 each, so filesystem warmup is shared
+        off_s = min(run(f"off{i}", base, False)[0] for i in range(2))
+        armed = [run(f"on{i}", base, True) for i in range(2)]
+        armed_s = min(w for w, _ in armed)
+        n_events = max(n for _, n in armed)
+        delta = armed_s - off_s
+        emit("trace_overhead", "off_runtime", round(off_s, 4), "s",
+             iters=n_iter, payload_mb=mb)
+        emit("trace_overhead", "armed_runtime", round(armed_s, 4), "s",
+             iters=n_iter, payload_mb=mb)
+        emit("trace_overhead", "armed_delta",
+             round(100.0 * delta / off_s, 2), "%", events=n_events)
+        if n_events:
+            emit("trace_overhead", "per_event",
+                 round(max(0.0, delta) / n_events * 1e6, 2), "us")
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
 def main(full: bool = False) -> None:
     codec_throughput(full)
     # checkpoint payload = 2 Lanczos vectors (nx·ny·2 fp32) ≈ 17 MB at 1024²
@@ -395,6 +461,7 @@ _SCENARIOS = {
     "device_snapshot": device_snapshot,
     "schedule_overhead": _schedule_overhead,
     "table4": main,
+    "trace_overhead": trace_overhead,
 }
 
 

@@ -8,6 +8,7 @@ Public surface:
     FTComm + backends         — ULFM-semantics communicator
     CraftEnv                  — paper Table 2 environment variables
     StorageTier               — storage backend interface (tiers & codec)
+    trace / simulate / tune   — record → replay → auto-tune loop
 """
 from repro.core.aft import AftAbortedError, AftZone, aft_zone
 from repro.core.checkpoint import Checkpoint

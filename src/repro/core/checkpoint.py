@@ -48,7 +48,7 @@ import time
 from pathlib import Path
 from typing import Dict, Optional
 
-from repro.core import checkpointables, nested, storage, tiers
+from repro.core import checkpointables, nested, storage, tiers, trace
 from repro.core.async_writer import AsyncWriter
 from repro.core.comm import ChannelComm, NullComm
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
@@ -166,6 +166,16 @@ class Checkpoint:
         self._committed = True
         if not self.env.enable:
             return
+        # Arm the run-trace recorder (CRAFT_TRACE) and stamp the trace with
+        # the knobs this checkpoint was captured under — the replayer
+        # re-captures a CraftEnv from exactly this snapshot.
+        trace.maybe_install_from_env(self.env)
+        trace.TRACER.emit(
+            "config",
+            name=self.name,
+            **trace.env_snapshot(self.env, payload_bytes=self.nbytes(),
+                                 comm_size=self.comm.size),
+        )
         chain = self.env.tier_chain
         if "pfs" in chain:
             self._pfs = storage.VersionStore(
@@ -439,7 +449,8 @@ class Checkpoint:
             tier_full = force_full or routed or slot not in slots
             ts = time.perf_counter()
             try:
-                self._write_store_guarded(store, version, slot, tier_full)
+                io_stats = self._write_store_guarded(
+                    store, version, slot, tier_full)
             except MemTierError:
                 # the RAM tier is best-effort write-through: a collective
                 # budget refusal skips it, the durable tiers still land
@@ -453,7 +464,7 @@ class Checkpoint:
                                     lambda: False)():
                     self.stats["enospc_retires"] += 1
                     try:
-                        self._write_store_guarded(
+                        io_stats = self._write_store_guarded(
                             store, version, slot, tier_full)
                     except ChaosCrash:
                         raise
@@ -467,6 +478,7 @@ class Checkpoint:
                         self.stats["abandoned_writes"] += 1
                     if health is not None and health.record_failure(exc):
                         self.stats["breaker_trips"] += 1
+                        trace.TRACER.emit("breaker", slot=slot)
                     self._note_degraded(slot)
                     routed = True
                     continue
@@ -480,6 +492,17 @@ class Checkpoint:
             self.stats[f"{slot}_writes"] += 1
             # feed the scheduler's per-tier cost model (EWMA on the tier)
             store.record_write(time.perf_counter() - ts, wrote_bytes)
+            trace.TRACER.emit(
+                "tier_write",
+                version=version,
+                slot=slot,
+                seconds=round(time.perf_counter() - ts, 6),
+                nbytes=wrote_bytes,
+                phys_bytes=(io_stats or {}).get("bytes", 0),
+                chunks=(io_stats or {}).get("chunks", 0),
+                ref_chunks=(io_stats or {}).get("ref_chunks", 0),
+                full=bool(tier_full),
+            )
         if not landed and last_exc is not None:
             # nothing landed anywhere: surface the failure unchanged so the
             # caller sees the original error type (and the version counter
@@ -505,16 +528,16 @@ class Checkpoint:
         """One tier write, under the ``CRAFT_IO_DEADLINE_S`` watchdog: a
         write that exceeds the deadline is abandoned (the helper thread may
         stay hung; it can only abort its own staging dir, never publish)
-        instead of wedging the sequencer or a sync commit."""
+        instead of wedging the sequencer or a sync commit.  Returns the
+        write's codec ``io_stats`` dict."""
         deadline = self.env.io_deadline_s
         if deadline > 0:
             from repro.core.health import call_with_deadline
 
-            call_with_deadline(
+            return call_with_deadline(
                 lambda: self._write_to_store(store, version, slot, force_full),
                 deadline, name=f"{self.name} {slot} v-{version}")
-        else:
-            self._write_to_store(store, version, slot, force_full)
+        return self._write_to_store(store, version, slot, force_full)
 
     def _delta_plan(self, slot: str, force_full: bool = False) -> Optional[dict]:
         """Delta state to diff against for this write, or None for a full
@@ -536,7 +559,7 @@ class Checkpoint:
         return state
 
     def _write_to_store(self, store, version: int, slot: str = "pfs",
-                        force_full: bool = False) -> None:
+                        force_full: bool = False) -> dict:
         staged = store.stage(version)
         delta_state = self._delta_plan(slot, force_full)
         delta_on = self.env.delta and slot != "mem"
@@ -624,6 +647,7 @@ class Checkpoint:
         self.stats["delta_chunks_total"] += io_stats.get("chunks", 0)
         self.stats["delta_chunks_skipped"] += io_stats.get("ref_chunks", 0)
         self.stats["retries"] += io_stats.get("retries", 0)
+        return io_stats
 
     def _run_item_write(self, item, sub: Path, ctx: IOContext,
                         slot: str, version: int, key: str) -> None:
@@ -748,6 +772,7 @@ class Checkpoint:
     def _read_from_store(self, store, slot, label, version, base_ctx):
         """One tier's restore attempt; returns None on success, else the
         error string to report (the caller may repair and retry once)."""
+        ts = time.perf_counter()
         try:
             # may trigger replica / partner / XOR / RS recovery; an
             # unrecoverable tier falls through to the next one (the
@@ -802,6 +827,14 @@ class Checkpoint:
             self.stats["tier_reads"].get(label, 0) + 1
         self.stats["restore_read_bytes"] = \
             (ctx.io_stats or {}).get("read_bytes", 0)
+        trace.TRACER.emit(
+            "restore",
+            version=version,
+            tier=label,
+            slot=slot,
+            seconds=round(time.perf_counter() - ts, 6),
+            read_bytes=self.stats["restore_read_bytes"],
+        )
         if slot == "mem" and self.env.elastic_hydrate \
                 and hasattr(store, "rehydrate"):
             # Replacement-rank hydration: a rank that restored from peer
@@ -921,6 +954,7 @@ class Checkpoint:
             except Exception as exc:
                 if health.record_failure(exc):
                     self.stats["breaker_trips"] += 1
+                    trace.TRACER.emit("breaker", slot=slot)
             else:
                 health.record_success()
 

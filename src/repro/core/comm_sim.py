@@ -14,6 +14,7 @@ import threading
 from collections import defaultdict
 from typing import Callable, Dict, List, Optional
 
+from repro.core import trace
 from repro.core.comm import FTComm, KilledError
 from repro.core.env import CraftEnv
 from repro.core.ftengine import CollectiveEngine, NodePool
@@ -114,6 +115,7 @@ class SimWorld:
         token = self.engine.epoch(eid).occupants.get(rank)
         if token is None:
             raise RuntimeError(f"no live incarnation at (epoch {eid}, rank {rank})")
+        trace.TRACER.emit("kill", rank=int(rank))
         with self._lock:
             self._dead.add(token)
             hooks = list(self._kill_hooks)

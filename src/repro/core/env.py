@@ -161,6 +161,17 @@ class CraftEnv:
     breaker_cooldown_s: float        # CRAFT_BREAKER_COOLDOWN_S: seconds an
                                      # open breaker waits before admitting a
                                      # half-open health probe
+    # --- trace recording + auto-tuning (core/trace.py / core/tune.py) ------
+    trace_path: str                  # CRAFT_TRACE: JSONL run-trace output
+                                     # path; empty = recorder stays the
+                                     # module-level no-op (zero overhead)
+    tune_online: bool                # CRAFT_TUNE_ONLINE: periodically
+                                     # re-solve per-tier cadences inside
+                                     # CheckpointPolicy from live write-cost
+                                     # EWMAs + the empirical failure log
+                                     # (default off)
+    tune_every_s: float              # CRAFT_TUNE_EVERY_S: seconds between
+                                     # online re-tuning solves (default 60)
 
     def tier_every_for(self, slot: str):
         """Cadence spec for a chain slot: int count, "auto", or None (legacy).
@@ -285,6 +296,11 @@ class CraftEnv:
         breaker_cooldown_s = float(env.get("CRAFT_BREAKER_COOLDOWN_S", "30"))
         if breaker_cooldown_s < 0:
             raise ValueError(f"CRAFT_BREAKER_COOLDOWN_S={breaker_cooldown_s!r}")
+        trace_path = env.get("CRAFT_TRACE", "").strip()
+        tune_online = _bool(env, "CRAFT_TUNE_ONLINE", False)
+        tune_every_s = float(env.get("CRAFT_TUNE_EVERY_S", "60"))
+        if tune_every_s <= 0:
+            raise ValueError(f"CRAFT_TUNE_EVERY_S={tune_every_s!r}")
         io_workers_raw = env.get("CRAFT_IO_WORKERS")
         if io_workers_raw is None:
             io_workers = min(4, os.cpu_count() or 1)
@@ -338,6 +354,9 @@ class CraftEnv:
             io_deadline_s=io_deadline_s,
             breaker_threshold=breaker_threshold,
             breaker_cooldown_s=breaker_cooldown_s,
+            trace_path=trace_path,
+            tune_online=tune_online,
+            tune_every_s=tune_every_s,
         )
 
 

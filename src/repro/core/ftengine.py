@@ -27,6 +27,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import trace
 from repro.core.comm import ProcFailedError, RevokedError
 
 _REDUCERS = {
@@ -113,6 +114,7 @@ class CollectiveEngine:
         report of an already-dead rank double-counted would inflate the
         failure rate and shrink every Daly interval derived from it.
         """
+        trace.TRACER.emit("failure", count=len(self._failure_times) + 1)
         self._failure_times.append(time.monotonic())
 
     def empirical_mtbf(self) -> Optional[float]:

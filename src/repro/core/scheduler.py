@@ -43,6 +43,7 @@ import threading
 import time
 from typing import Callable, Dict, Optional, Tuple
 
+from repro.core import trace
 from repro.core.env import CraftEnv
 
 #: Fallback MTBF when neither ``CRAFT_MTBF_SECONDS`` nor an empirical rate
@@ -68,6 +69,7 @@ def notify_recovery(stats: Optional[dict] = None) -> int:
     live :class:`CheckpointPolicy` notices at its next decision, resets its
     cost estimators, and forces a full (non-delta) write."""
     global _RECOVERY_EPOCH
+    trace.TRACER.emit("recovery")
     with _EPOCH_LOCK:
         _RECOVERY_EPOCH += 1
         return _RECOVERY_EPOCH
@@ -178,11 +180,16 @@ class CheckpointPolicy:
         # slice is only due a full CRAFT_SCRUB_EVERY after policy creation,
         # so startup (restore, first writes) is never competing with scrub IO
         self._last_scrub_t = now
+        # online re-tuning (CRAFT_TUNE_ONLINE): first solve is only due a
+        # full CRAFT_TUNE_EVERY_S after policy creation, once live EWMAs
+        # and a step estimate exist
+        self._last_retune_t = now
+        self._trace_inputs: Tuple = (None, 1, 1, 0)
         self.stats = {
             "decisions": 0, "writes": 0, "skips": 0,
             "preempt_flushes": 0, "final_writes": 0,
             "backpressure_stretches": 0, "recovery_resets": 0,
-            "scrub_slices": 0,
+            "scrub_slices": 0, "online_retunes": 0,
         }
 
     # ------------------------------------------------------------- cadences
@@ -250,6 +257,7 @@ class CheckpointPolicy:
         overrides the decision-gap inference."""
         if seconds <= 0:
             return
+        trace.TRACER.emit("step", seconds=seconds)
         self._step_direct = True
         prev = self._step_ewma
         self._step_ewma = seconds if prev is None else (
@@ -318,6 +326,13 @@ class CheckpointPolicy:
         if epoch == self._seen_epoch:
             return
         self._seen_epoch = epoch
+        self.reset_estimators()
+
+    def reset_estimators(self) -> None:
+        """Post-recovery reset: drop every tier's learned cost and force the
+        next write full (survivor tiers may have holes).  Public so the
+        trace replayer (:mod:`repro.core.simulate`) can apply a recorded
+        recovery without touching the process-wide epoch."""
         for store in self._stores.values():
             store.reset_cost()
         self._force_full = True
@@ -348,7 +363,12 @@ class CheckpointPolicy:
         now = self._clock()
         self._observe_tick(now, iteration)
         self._maybe_reset_on_recovery()
+        self._maybe_retune(now)
         self.stats["decisions"] += 1
+        # one backpressure reading per decision (also what the trace
+        # records, so a replayed policy sees the identical input)
+        pending = max(0, int(self._backpressure()))
+        self._trace_inputs = (iteration, cp_freq, next_version, pending)
 
         # external triggers trump every cadence gate
         if self._preempt.is_set() and not self._preempt_flushed:
@@ -368,7 +388,6 @@ class CheckpointPolicy:
         if not self._chain:
             return self._emit(_SKIP)
 
-        pending = max(0, int(self._backpressure()))
         stretch = 1.0 + pending
         adaptive = bool(self.env.tier_every)
         if adaptive and pending > 0:
@@ -418,6 +437,8 @@ class CheckpointPolicy:
         """Advance cadence state after ``Checkpoint`` scheduled the write."""
         if not decision.write:
             return
+        trace.TRACER.emit("scheduled", version=version,
+                          tiers=list(decision.tiers), reason=decision.reason)
         now = self._clock()
         for slot in decision.tiers:
             if slot in self._degraded:
@@ -443,6 +464,7 @@ class CheckpointPolicy:
         on it again (:meth:`note_tier_written`)."""
         if slot not in self._chain:
             return
+        trace.TRACER.emit("degraded", slot=slot)
         self._degraded.add(slot)
         self._last_write_t[slot] = -math.inf
 
@@ -458,10 +480,60 @@ class CheckpointPolicy:
     def degraded_slots(self) -> Tuple[str, ...]:
         return tuple(s for s in self._chain if s in self._degraded)
 
+    # -------------------------------------------------- online re-tuning
+    def _maybe_retune(self, now: float) -> None:
+        """``CRAFT_TUNE_ONLINE``: periodically re-solve the count cadences
+        from live write-cost EWMAs and the empirical MTBF — the offline
+        ``craft tune`` solve, folded into the running policy.
+
+        Only count cadences under ``CRAFT_TIER_EVERY`` are touched ("auto"
+        slots already re-derive their Daly interval every decision; the
+        legacy version-modulo mode keeps its bit-compatible behavior), and
+        only once a step-duration estimate exists to convert seconds into
+        checkpoint opportunities.
+        """
+        if not (self.env.tune_online and self.env.tier_every):
+            return
+        if now - self._last_retune_t < self.env.tune_every_s:
+            return
+        self._last_retune_t = now
+        step = self._step_ewma
+        if not step or step <= 0:
+            return
+        mtbf = self.mtbf()
+        changed = {}
+        for slot in self._chain:
+            spec = self._cadence.get(slot)
+            if not isinstance(spec, int):
+                continue
+            cost = self.tier_cost(slot)
+            if cost is None or cost <= 0:
+                continue
+            interval = daly_interval(cost, mtbf)
+            if not math.isfinite(interval):
+                continue
+            count = max(1, int(round(interval / step)))
+            if count != spec:
+                self._cadence[slot] = count
+                changed[slot] = count
+        if changed:
+            self.stats["online_retunes"] += 1
+            trace.TRACER.emit("retune", cadence={
+                s: self._cadence[s] for s in self._chain})
+
     # ------------------------------------------------------------ internals
     def _emit(self, d: Decision) -> Decision:
         if not d.write:
             self.stats["skips"] += 1
+        tr = trace.TRACER
+        if tr.enabled:
+            it, cp_freq, next_version, pending = self._trace_inputs
+            tr.emit(
+                "decision", it=it, cp_freq=cp_freq,
+                next_version=next_version, pending=pending,
+                write=d.write, tiers=list(d.tiers), full=d.full,
+                sync=d.sync, final=d.final, reason=d.reason,
+            )
         return d
 
     def _deepest(self) -> str:

@@ -29,6 +29,8 @@ import shutil
 from pathlib import Path
 from typing import List, Optional, Set, Tuple
 
+from repro.core import trace
+
 _TMP_PREFIX = ".tmp-"
 _VERSION_PREFIX = "v-"
 _DELTA_DEPS_PREFIX = "deltadeps-"
@@ -304,6 +306,8 @@ class StorageTier(abc.ABC):
         """Feed one observed version-write duration into this tier's cost
         model (called by ``Checkpoint`` around every landed write; the
         scheduler consumes the estimate via :meth:`write_cost`)."""
+        trace.TRACER.emit("tier_cost", tier=self.label,
+                          seconds=seconds, nbytes=nbytes)
         stats = getattr(self, "io_stats", None)
         if stats is None:
             stats = self.io_stats = {

@@ -255,3 +255,119 @@ def test_adamw_moves_against_gradient(bits, seed):
     # positive gradient → parameters must decrease
     assert float(jnp.mean(p2["w"] - p["w"])) < 0
     assert int(st2["count"]) == 1
+
+
+# ------------------------------------------------- trace replay / simulator
+def _synthetic_trace(count, n_steps, step_s, write_s):
+    """A hand-built trace: one config + a fixed-cadence run (no live IO)."""
+    env = {"CRAFT_TIER_CHAIN": "pfs", "CRAFT_TIER_EVERY": f"pfs:{count}"}
+    events = [{"t": 0.0, "kind": "config", "env": env,
+               "payload_bytes": 1 << 20, "comm_size": 1}]
+    t, version, ticks = 0.0, 0, 0
+    for it in range(n_steps):
+        t += step_s
+        events.append({"t": t, "kind": "step", "seconds": step_s})
+        ticks += 1
+        write = ticks % count == 0
+        events.append({"t": t, "kind": "decision", "it": it, "cp_freq": 1,
+                       "next_version": version + 1, "pending": 0,
+                       "write": write, "tiers": ["pfs"] if write else [],
+                       "full": False, "sync": False, "final": False,
+                       "reason": "cadence" if write else ""})
+        if write:
+            version += 1
+            t += write_s
+            events.append({"t": t, "kind": "tier_write", "version": version,
+                           "slot": "pfs", "seconds": write_s,
+                           "nbytes": 1 << 20, "phys_bytes": 1 << 20,
+                           "chunks": 1, "ref_chunks": 0, "full": False})
+            events.append({"t": t, "kind": "scheduled", "version": version,
+                           "tiers": ["pfs"], "reason": "cadence"})
+    return events
+
+
+@_SETTINGS
+@given(
+    count=st.integers(1, 9),
+    n_steps=st.integers(5, 60),
+    step_ms=st.integers(1, 50),
+    write_ms=st.integers(1, 200),
+)
+def test_replay_is_bit_deterministic_and_matches_cadence(
+        count, n_steps, step_ms, write_ms):
+    """Same trace ⇒ bit-identical re-derived decision sequence, and on a
+    clean fixed-cadence trace the replayed policy reproduces the recorded
+    decisions exactly (the replay-vs-live contract, minus the live IO)."""
+    from repro.core.simulate import replay
+
+    events = _synthetic_trace(count, n_steps, step_ms / 1e3, write_ms / 1e3)
+    a = replay(events)
+    b = replay(events)
+    assert a.sim_decisions == b.sim_decisions          # bit-identical
+    assert a.decisions_match, f"diverged at {a.mismatches[:3]}"
+    assert a.scheduled_writes == n_steps // count
+
+
+@_SETTINGS
+@given(
+    seed=st.integers(0, 2 ** 31 - 1),
+    delta=st.floats(1.0, 20.0),
+    mtbf=st.floats(100.0, 500.0),
+    count=st.integers(1, 64),
+)
+def test_simulator_deterministic_under_seed(seed, delta, mtbf, count):
+    """Same summary + same seed + same config ⇒ identical report; a
+    different seed may (and for failure-heavy regimes does) differ."""
+    from repro.core.simulate import TraceSummary, simulate_config
+
+    s = TraceSummary(
+        config_env={"CRAFT_TIER_CHAIN": "pfs", "CRAFT_TIER_EVERY": "pfs:1",
+                    "CRAFT_MTBF_SECONDS": str(mtbf)},
+        payload_bytes=1 << 20, comm_size=1, steps=[1.0],
+        tier_full_cost={"pfs": delta}, tier_delta_cost={"pfs": delta},
+        tier_write_bytes={"pfs": float(1 << 20)}, restore_seconds=delta,
+        failure_gaps=[mtbf], duration=1000.0, n_decisions=1000)
+    ov = {"CRAFT_TIER_EVERY": f"pfs:{count}"}
+    a = simulate_config(s, ov, seed=seed, horizon_steps=300)
+    b = simulate_config(s, ov, seed=seed, horizon_steps=300)
+    assert a.as_dict() == b.as_dict()
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(
+    delta=st.floats(4.0, 12.0),
+    mtbf=st.floats(150.0, 300.0),
+)
+def test_simulator_optimum_agrees_with_daly(delta, mtbf):
+    """On a Poisson-failure trace with constant write cost and unit steps,
+    the simulator's best fixed interval must sit in the same flat basin as
+    Daly's analytic optimum: the overhead at the grid point nearest
+    ``daly_interval(δ, M)`` is within 1.5× of the best grid overhead."""
+    from repro.core.scheduler import daly_interval
+    from repro.core.simulate import TraceSummary, simulate_config
+
+    s = TraceSummary(
+        config_env={"CRAFT_TIER_CHAIN": "pfs", "CRAFT_TIER_EVERY": "pfs:1",
+                    "CRAFT_MTBF_SECONDS": str(mtbf)},
+        payload_bytes=1 << 20, comm_size=1, steps=[1.0],
+        tier_full_cost={"pfs": delta}, tier_delta_cost={"pfs": delta},
+        tier_write_bytes={"pfs": float(1 << 20)}, restore_seconds=delta,
+        failure_gaps=[mtbf], duration=1000.0, n_decisions=1000)
+    daly = daly_interval(delta, mtbf)          # seconds == steps (1 s steps)
+    grid = sorted({1, 2, 4, 8, 16, 32, 64, 128, 256,
+                   max(1, int(round(daly)))})
+    horizon = int(6 * mtbf)                    # several expected failures
+
+    def overhead(count):                       # averaged over 3 seeds
+        return sum(
+            simulate_config(
+                s, {"CRAFT_TIER_EVERY": f"pfs:{count}"},
+                seed=k, horizon_steps=horizon).overhead_seconds
+            for k in (0, 1, 2))
+
+    scores = {n: overhead(n) for n in grid}
+    best = min(scores.values())
+    nearest = min(grid, key=lambda n: abs(n - daly))
+    assert scores[nearest] <= 1.5 * best + 1e-9, (
+        f"daly={daly:.1f} nearest={nearest} scores={scores}")

@@ -387,3 +387,131 @@ class TestStepTimer:
         assert t.ewma == pytest.approx(3.0)
         t.observe(-1.0)                            # ignored
         assert t.last == 4.0
+
+
+class TestDalyDegenerateEdges:
+    """The full degenerate-input contract the simulator/tuner rely on —
+    a tuner grid sweep hits these corners routinely."""
+
+    def test_negative_cost_is_zero_interval(self):
+        assert daly_interval(-5.0, 3600.0) == 0.0
+
+    def test_infinite_mtbf_never_checkpoints(self):
+        import math
+        assert daly_interval(1.0, math.inf) == math.inf
+
+    def test_negative_mtbf_is_infinite(self):
+        assert daly_interval(1.0, -10.0) == float("inf")
+
+    def test_saturation_boundary_exact(self):
+        # δ == 2M is the first saturated point: max(M, δ) == δ there
+        assert daly_interval(200.0, 100.0) == 200.0
+        # just below the boundary the closed form applies and stays ≥ δ
+        assert daly_interval(199.999999, 100.0) >= 199.999999
+
+
+class TestDegradedWalltimeInteraction:
+    """A degraded (always-due) slot must not mask the walltime guard, and
+    the guard's final full flush covers the whole chain including the
+    degraded slot — the last checkpoint before the job dies is the one
+    write that must not skip a tier that might be back."""
+
+    def test_walltime_fires_with_degraded_slot(self):
+        clock = FakeClock()
+        policy, stores = make_policy({
+            "CRAFT_TIER_EVERY": "node:4,pfs:1000",
+            "CRAFT_WALLTIME_SECONDS": "100",
+            "CRAFT_WALLTIME_MARGIN_SECONDS": "10",
+        }, slots=("node", "pfs"), clock=clock)
+        policy.note_degraded("node")
+        # degraded slot is owed every opportunity while we're inside budget
+        d = policy.need_checkpoint(1, next_version=1)
+        assert d.write and "node" in d.tiers and not d.final
+        policy.record_written(d, 1)
+        clock.advance(95.0)
+        d = policy.need_checkpoint(2, next_version=2)
+        assert d.final and d.full and d.sync
+        assert d.tiers == ("node", "pfs")        # whole chain, degraded too
+        assert "node" in policy.degraded_slots()  # still owed until landed
+
+    def test_degraded_slot_cleared_only_by_landing(self):
+        clock = FakeClock()
+        policy, stores = make_policy({
+            "CRAFT_TIER_EVERY": "node:2,pfs:1000",
+        }, slots=("node", "pfs"), clock=clock)
+        policy.note_degraded("node")
+        d = policy.need_checkpoint(1, next_version=1)
+        assert "node" in d.tiers
+        # scheduling alone (record_written) must NOT clear the debt — the
+        # write may have been routed away from the slot again
+        policy.record_written(d, 1)
+        assert "node" in policy.degraded_slots()
+        policy.note_tier_written("node")
+        assert "node" not in policy.degraded_slots()
+
+
+class TestRetryJitterBand:
+    def test_backoff_jitter_stays_in_band(self):
+        """Delay before retry k is backoff · 2^(k−1) · u with u ∈ [0.5, 1.5):
+        the fleet-desynchronization contract docs/tuning.md quotes."""
+        import errno as _errno
+
+        from repro.core.health import retry_call
+
+        delays = []
+        calls = [0]
+
+        def flaky():
+            calls[0] += 1
+            if calls[0] <= 40:
+                raise OSError(_errno.EIO, "transient")
+            return "ok"
+
+        assert retry_call(flaky, retries=40, backoff_ms=8.0,
+                          sleep=delays.append) == "ok"
+        assert len(delays) == 40
+        for k, d in enumerate(delays, start=1):
+            base = (8.0 / 1000.0) * (2 ** (k - 1))
+            assert base * 0.5 <= d < base * 1.5
+
+
+class TestOnlineRetune:
+    def test_retune_replaces_count_cadences_from_live_costs(self):
+        clock = FakeClock()
+        policy, stores = make_policy({
+            "CRAFT_TIER_EVERY": "pfs:1",
+            "CRAFT_TUNE_ONLINE": "1",
+            "CRAFT_TUNE_EVERY_S": "10",
+            "CRAFT_MTBF_SECONDS": "3600",
+        }, clock=clock)
+        # live estimates: 1 s steps, 2 s writes → Daly interval ≫ 1 step
+        policy.observe_step_seconds(1.0)
+        stores["pfs"].record_write(2.0)
+        assert policy.cadence("pfs") == 1
+        clock.advance(11.0)
+        policy.need_checkpoint(1, next_version=1)
+        expected = max(1, int(round(
+            daly_interval(2.0, 3600.0) / policy.step_seconds())))
+        assert policy.cadence("pfs") == expected > 1
+        assert policy.stats["online_retunes"] == 1
+        # stable inputs ⇒ no further retunes
+        clock.advance(11.0)
+        policy.need_checkpoint(2, next_version=1)
+        assert policy.stats["online_retunes"] == 1
+
+    def test_retune_off_by_default_and_gated_on_step_estimate(self):
+        clock = FakeClock()
+        policy, stores = make_policy({
+            "CRAFT_TIER_EVERY": "pfs:1",
+            "CRAFT_TUNE_ONLINE": "1",
+            "CRAFT_TUNE_EVERY_S": "10",
+        }, clock=clock)
+        stores["pfs"].record_write(2.0)
+        clock.advance(11.0)
+        policy.need_checkpoint(None, next_version=1)   # no step estimate yet
+        assert policy.cadence("pfs") == 1
+        off, _ = make_policy({"CRAFT_TIER_EVERY": "pfs:1"}, clock=clock)
+        off.observe_step_seconds(1.0)
+        clock.advance(100.0)
+        off.need_checkpoint(1, next_version=1)
+        assert off.stats["online_retunes"] == 0
