@@ -408,6 +408,70 @@ def trace_overhead(full: bool = False) -> None:
         shutil.rmtree(base, ignore_errors=True)
 
 
+def metrics_overhead(full: bool = False) -> None:
+    """Armed vs off: the ``CRAFT_METRICS`` registry on the hot write path.
+
+    Mirrors ``trace_overhead``: the same checkpointed workload runs twice —
+    once with the live metrics registry armed (plus a scrape at the end to
+    prove it filled) and once with every hook left as the single dynamic
+    no-op call — and the runtime delta lands on the scoreboard.  The
+    acceptance bar is ≤1% with ``CRAFT_METRICS`` unset."""
+    from repro.core import metrics as metrics_mod
+
+    rng = np.random.default_rng(5)
+    mb = 8 if full else 4
+    n_iter = 120 if full else 60
+    arr = rng.standard_normal((mb * 1024 * 1024 // 4,)).astype(np.float32)
+
+    def run(label: str, base: Path, armed: bool):
+        envmap = {
+            "CRAFT_CP_PATH": str(base / label),
+            "CRAFT_USE_SCR": "0",
+            "CRAFT_TIER_EVERY": "pfs:5",
+        }
+        if armed:
+            envmap["CRAFT_METRICS"] = "1"
+        env = CraftEnv.capture(envmap)
+        state = arr.copy()
+        cp = Checkpoint(f"metrics_{label}", env=env)
+        cp.add("state", state)
+        cp.commit()
+        t0 = time.perf_counter()
+        try:
+            for it in range(n_iter):
+                state += 1.0
+                if cp.need_checkpoint(it):
+                    cp.update_and_write(it)
+            cp.wait()
+        finally:
+            cp.close()
+        wall = time.perf_counter() - t0
+        n_series = 0
+        if armed:
+            snap = metrics_mod.snapshot()
+            n_series = (len(snap["counters"]) + len(snap["gauges"])
+                        + len(snap["histograms"]))
+            assert n_series > 0, "armed registry stayed empty"
+        metrics_mod.uninstall()
+        return wall, n_series
+
+    base = Path(tempfile.mkdtemp(prefix="craft-metrics-"))
+    try:
+        off_s = min(run(f"off{i}", base, False)[0] for i in range(2))
+        armed = [run(f"on{i}", base, True) for i in range(2)]
+        armed_s = min(w for w, _ in armed)
+        n_series = max(n for _, n in armed)
+        delta = armed_s - off_s
+        emit("metrics_overhead", "off_runtime", round(off_s, 4), "s",
+             iters=n_iter, payload_mb=mb)
+        emit("metrics_overhead", "armed_runtime", round(armed_s, 4), "s",
+             iters=n_iter, payload_mb=mb)
+        emit("metrics_overhead", "armed_delta",
+             round(100.0 * delta / off_s, 2), "%", series=n_series)
+    finally:
+        shutil.rmtree(base, ignore_errors=True)
+
+
 def main(full: bool = False) -> None:
     codec_throughput(full)
     # checkpoint payload = 2 Lanczos vectors (nx·ny·2 fp32) ≈ 17 MB at 1024²
@@ -460,6 +524,7 @@ _SCENARIOS = {
     "delta_write": delta_write,
     "device_snapshot": device_snapshot,
     "schedule_overhead": _schedule_overhead,
+    "metrics_overhead": metrics_overhead,
     "table4": main,
     "trace_overhead": trace_overhead,
 }

@@ -9,7 +9,9 @@ Public surface:
     CraftEnv                  — paper Table 2 environment variables
     StorageTier               — storage backend interface (tiers & codec)
     trace / simulate / tune   — record → replay → auto-tune loop
+    metrics / telemetry       — live telemetry plane (/metrics, /healthz)
 """
+from repro.core import metrics, telemetry
 from repro.core.aft import AftAbortedError, AftZone, aft_zone
 from repro.core.checkpoint import Checkpoint
 from repro.core.checkpointables import (
@@ -33,4 +35,5 @@ __all__ = [
     "CheckpointError", "CpBase", "IOContext", "CraftEnv", "StorageTier",
     "MemFabric", "MemStore", "MemTierError",
     "CheckpointPolicy", "Decision", "daly_interval",
+    "metrics", "telemetry",
 ]

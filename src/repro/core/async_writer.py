@@ -37,6 +37,8 @@ import queue
 from collections import deque
 from typing import Callable, List, Optional, Sequence
 
+from . import metrics, trace
+
 
 class AsyncWriter:
     """Ordered writer lane + bounded worker pool for checkpoint IO jobs."""
@@ -68,10 +70,18 @@ class AsyncWriter:
         self._closed = False
         # timing taps consumed by the checkpoint scheduler: per-job wall time
         # on the ordered lane, and the high-water mark of the queue depth
-        self.stats = {
+        # StatsView mirrors into the registry as async_* series per writer
+        self.stats = metrics.StatsView(name, {
             "jobs": 0, "job_seconds": 0.0,
             "last_job_seconds": 0.0, "max_pending": 0,
-        }
+            "stall_warnings": 0,
+        }, prefix="async_", label="writer")
+        # stall watchdog state: submit times of in-flight ordered-lane jobs
+        # (the sequencer completes them in order, so the head is the oldest),
+        # and the id of the job we already warned about (one warning per job)
+        self._inflight: "deque" = deque()
+        self._job_seq = 0
+        self._stall_warned = -1
 
     # -- lifecycle -----------------------------------------------------------
     def _apply_pin(self) -> None:
@@ -117,10 +127,15 @@ class AsyncWriter:
                 dt = time.perf_counter() - t0
                 with self._cv:
                     self._pending -= 1
+                    pending = self._pending
+                    if self._inflight:
+                        self._inflight.popleft()
                     self.stats["jobs"] += 1
                     self.stats["job_seconds"] += dt
                     self.stats["last_job_seconds"] = dt
                     self._cv.notify_all()
+                metrics.observe("async_job_seconds", dt)
+                metrics.set_gauge("async_pending", pending)
 
     def _pool_loop(self) -> None:
         self._apply_pin()
@@ -143,16 +158,55 @@ class AsyncWriter:
         self._ensure_seq_started()
         with self._cv:
             self._pending += 1
+            pending = self._pending
+            self._job_seq += 1
+            self._inflight.append((self._job_seq, time.monotonic(), label))
             if self._pending > self.stats["max_pending"]:
                 self.stats["max_pending"] = self._pending
+        metrics.set_gauge("async_pending", pending)
         self._queue.put((job, label))
 
     def wait(self) -> None:
         """Block until all submitted jobs finished; re-raise writer errors."""
+        t0 = time.perf_counter() if metrics.REGISTRY.enabled else 0.0
         with self._cv:
             while self._pending > 0:
                 self._cv.wait()
+        if t0:
+            metrics.observe("async_fence_seconds", time.perf_counter() - t0)
         self._raise_pending_error()
+
+    # -- stall watchdog --------------------------------------------------------
+    def oldest_pending_s(self, now: Optional[float] = None) -> float:
+        """Age in seconds of the oldest in-flight ordered-lane job (0 when
+        the lane is drained) — the ``async_oldest_pending_s`` heartbeat."""
+        with self._cv:
+            if not self._inflight:
+                return 0.0
+            t0 = self._inflight[0][1]
+        return max(0.0, (time.monotonic() if now is None else now) - t0)
+
+    def check_stall(self, deadline_s: float = 0.0) -> float:
+        """Publish the heartbeat gauge and warn (once per job, through both
+        metrics and trace) when the oldest pending write has outlived
+        ``CRAFT_IO_DEADLINE_S``.  Called from ``Checkpoint._decide`` every
+        step — cheap: one lock, one clock read."""
+        with self._cv:
+            if self._inflight:
+                seq, t0, label = self._inflight[0]
+                age = time.monotonic() - t0
+            else:
+                seq, label, age = -1, None, 0.0
+            pending = self._pending
+        metrics.set_gauge("async_oldest_pending_s", age)
+        if deadline_s > 0 and seq >= 0 and age > deadline_s \
+                and seq != self._stall_warned:
+            self._stall_warned = seq
+            self.stats["stall_warnings"] += 1
+            metrics.inc("async_stall_warnings")
+            trace.emit("async_stall", label=label, age_s=round(age, 3),
+                       deadline_s=deadline_s, pending=pending)
+        return age
 
     # -- fanout lane -----------------------------------------------------------
     def run_parallel(self, jobs: Sequence[Callable[[], object]]) -> list:

@@ -48,7 +48,8 @@ import time
 from pathlib import Path
 from typing import Dict, Optional
 
-from repro.core import checkpointables, nested, storage, tiers, trace
+from repro.core import (checkpointables, metrics, nested, storage, telemetry,
+                        tiers, trace)
 from repro.core.async_writer import AsyncWriter
 from repro.core.comm import ChannelComm, NullComm
 from repro.core.cpbase import CheckpointError, CpBase, IOContext
@@ -99,7 +100,12 @@ class Checkpoint:
         # written to (or restored from) that tier, diffed against at the next
         # write.  {"version", "deps": set, "files": {rel: manifest}}
         self._delta_state: Dict[str, dict] = {}
-        self.stats = {
+        self._last_write_t = None    # monotonic stamp of the last landed
+                                     # version (telemetry /healthz age)
+        # StatsView: a plain dict to every existing caller, but numeric
+        # writes mirror into the live metrics registry (CRAFT_METRICS) as
+        # cp_* series labelled with this checkpoint's name
+        self.stats = metrics.StatsView(name, {
             "writes": 0,
             "mem_writes": 0,
             "mem_skipped": 0,
@@ -132,7 +138,7 @@ class Checkpoint:
                                       # CRAFT_IO_DEADLINE_S watchdog
             "enospc_retires": 0,      # emergency retention squeezes that
                                       # freed space for a write in flight
-        }
+        })
 
     # ------------------------------------------------------------------ add
     def add(self, key: str, obj, **kw) -> None:
@@ -170,6 +176,12 @@ class Checkpoint:
         # the knobs this checkpoint was captured under — the replayer
         # re-captures a CraftEnv from exactly this snapshot.
         trace.maybe_install_from_env(self.env)
+        # Arm the live telemetry plane (CRAFT_METRICS / CRAFT_METRICS_PORT):
+        # the metrics registry, the /metrics + /healthz exporter, and this
+        # checkpoint's /healthz registration (weak — no lifetime extension).
+        metrics.maybe_install_from_env(self.env)
+        telemetry.maybe_start_from_env(self.env)
+        telemetry.register_checkpoint(self)
         trace.TRACER.emit(
             "config",
             name=self.name,
@@ -324,11 +336,13 @@ class Checkpoint:
             self._update_all()
             self._write_version(version, decision)
         self._version = version
+        self._last_write_t = self._clock()
+        metrics.set_gauge("cp_version", version, cp=self.name)
         self._policy.record_written(decision, version)
         if decision.reason == "preempt":
-            self.stats["preempt_flushes"] += 1
+            self.stats.inc("preempt_flushes")
         if decision.final:
-            self.stats["final_writes"] += 1
+            self.stats.inc("final_writes")
         return True
 
     # ------------------------------------------------------------ scheduling
@@ -382,6 +396,11 @@ class Checkpoint:
             # skipped steps are the scrubber's idle windows (throttled by
             # CRAFT_SCRUB_EVERY / CRAFT_SCRUB_BYTES_PER_S via the policy)
             self._scrubber.opportunity()
+        # Async stall watchdog: heartbeat gauge + one warning per job that
+        # outlives CRAFT_IO_DEADLINE_S — only when some observer is armed.
+        if self._writer is not None and (metrics.REGISTRY.enabled
+                                         or trace.TRACER.enabled):
+            self._writer.check_stall(self.env.io_deadline_s)
         return d
 
     def _update_all(self) -> None:
@@ -454,7 +473,7 @@ class Checkpoint:
             except MemTierError:
                 # the RAM tier is best-effort write-through: a collective
                 # budget refusal skips it, the durable tiers still land
-                self.stats["mem_skipped"] += 1
+                self.stats.inc("mem_skipped")
                 continue
             except ChaosCrash:
                 raise             # simulated process death: no cleanup
@@ -462,7 +481,7 @@ class Checkpoint:
                 if isinstance(exc, OSError) and exc.errno == errno.ENOSPC \
                         and getattr(store, "retire_for_space",
                                     lambda: False)():
-                    self.stats["enospc_retires"] += 1
+                    self.stats.inc("enospc_retires")
                     try:
                         io_stats = self._write_store_guarded(
                             store, version, slot, tier_full)
@@ -475,9 +494,9 @@ class Checkpoint:
                 if exc is not None:
                     last_exc = exc
                     if isinstance(exc, health_mod.WriteDeadlineExceeded):
-                        self.stats["abandoned_writes"] += 1
+                        self.stats.inc("abandoned_writes")
                     if health is not None and health.record_failure(exc):
-                        self.stats["breaker_trips"] += 1
+                        self.stats.inc("breaker_trips")
                         trace.TRACER.emit("breaker", slot=slot)
                     self._note_degraded(slot)
                     routed = True
@@ -489,7 +508,7 @@ class Checkpoint:
                 self._policy.note_tier_written(slot)
             landed.append(slot)
             routed = False
-            self.stats[f"{slot}_writes"] += 1
+            self.stats.inc(f"{slot}_writes")
             # feed the scheduler's per-tier cost model (EWMA on the tier)
             store.record_write(time.perf_counter() - ts, wrote_bytes)
             trace.TRACER.emit(
@@ -510,13 +529,13 @@ class Checkpoint:
             raise last_exc
         # Parent published ⇒ children are now inconsistent (paper Table 1).
         nested.GLOBAL_REGISTRY.invalidate_children(self)
-        self.stats["writes"] += 1
-        self.stats["bytes_written"] += wrote_bytes
-        self.stats["write_seconds"] += time.perf_counter() - t0
+        self.stats.inc("writes")
+        self.stats.inc("bytes_written", wrote_bytes)
+        self.stats.inc("write_seconds", time.perf_counter() - t0)
 
     def _note_degraded(self, slot: str) -> None:
         """Bookkeeping for a tier write that did not land on its tier."""
-        self.stats["degraded_writes"] += 1
+        self.stats.inc("degraded_writes")
         # no delta chain crosses an outage: the tier's next successful
         # write diffs against nothing, i.e. is a forced full write
         self._delta_state.pop(slot, None)
@@ -554,7 +573,7 @@ class Checkpoint:
             return None
         prospective = {state["version"]} | set(state["deps"])
         if 1 + len(prospective) > self.env.delta_max_chain:
-            self.stats["delta_compactions"] += 1
+            self.stats.inc("delta_compactions")
             return None
         return state
 
@@ -637,16 +656,21 @@ class Checkpoint:
             # cleanup, exactly as after a real crash
             if not isinstance(exc, ChaosCrash):
                 store.abort(staged)
-            self.stats["retries"] += io_stats.get("retries", 0)
+            self.stats.inc("retries", io_stats.get("retries", 0))
             raise
         if delta_on:
             self._delta_state[slot] = {
                 "version": version, "deps": deps, "files": chunks_db,
             }
-        self.stats["tier_bytes_written"] += io_stats.get("bytes", 0)
-        self.stats["delta_chunks_total"] += io_stats.get("chunks", 0)
-        self.stats["delta_chunks_skipped"] += io_stats.get("ref_chunks", 0)
-        self.stats["retries"] += io_stats.get("retries", 0)
+        self.stats.inc("tier_bytes_written", io_stats.get("bytes", 0))
+        self.stats.inc("delta_chunks_total", io_stats.get("chunks", 0))
+        self.stats.inc("delta_chunks_skipped", io_stats.get("ref_chunks", 0))
+        self.stats.inc("retries", io_stats.get("retries", 0))
+        # per-tier codec series (the delta hit rate is ref_chunks / chunks)
+        metrics.inc("tier_phys_bytes", io_stats.get("bytes", 0), slot=slot)
+        metrics.inc("tier_chunks", io_stats.get("chunks", 0), slot=slot)
+        metrics.inc("tier_ref_chunks", io_stats.get("ref_chunks", 0),
+                    slot=slot)
         return io_stats
 
     def _run_item_write(self, item, sub: Path, ctx: IOContext,
@@ -691,8 +715,8 @@ class Checkpoint:
         t0 = time.perf_counter()
         self._read_version(version)
         self._version = version
-        self.stats["reads"] += 1
-        self.stats["read_seconds"] += time.perf_counter() - t0
+        self.stats.inc("reads")
+        self.stats.inc("read_seconds", time.perf_counter() - t0)
         if self._policy is not None:
             # restart the per-tier interval clocks so the resumed run does
             # not immediately re-write the version it just read
@@ -761,7 +785,7 @@ class Checkpoint:
                 # falls through while a same-tier repair is possible.
                 if attempt == 0 and self._scrubber is not None \
                         and self._scrubber.repair_version(store, slot, version):
-                    self.stats["read_repairs"] += 1
+                    self.stats.inc("read_repairs")
                     continue
                 errors.append(err)
                 break
@@ -819,14 +843,19 @@ class Checkpoint:
                 ctx,
             )
         except (CheckpointError, OSError) as exc:
-            self.stats["retries"] += (ctx.io_stats or {}).get("retries", 0)
+            self.stats.inc("retries", (ctx.io_stats or {}).get("retries", 0))
             return f"{label}: {exc}"
-        self.stats["retries"] += (ctx.io_stats or {}).get("retries", 0)
+        self.stats.inc("retries", (ctx.io_stats or {}).get("retries", 0))
         self.stats["restore_tier"] = label
         self.stats["tier_reads"][label] = \
             self.stats["tier_reads"].get(label, 0) + 1
         self.stats["restore_read_bytes"] = \
             (ctx.io_stats or {}).get("read_bytes", 0)
+        metrics.inc("restores", slot=slot)
+        metrics.observe("restore_seconds", time.perf_counter() - ts,
+                        slot=slot)
+        metrics.inc("restore_read_bytes",
+                    self.stats["restore_read_bytes"], slot=slot)
         trace.TRACER.emit(
             "restore",
             version=version,
@@ -840,7 +869,7 @@ class Checkpoint:
             # Replacement-rank hydration: a rank that restored from peer
             # replicas re-seeds its own fabric slots so the redundancy
             # group is whole again — all without touching disk.
-            self.stats["mem_rehydrations"] += store.rehydrate(version)
+            self.stats.inc("mem_rehydrations", store.rehydrate(version))
         self._prime_delta_state(version, restored_slot=slot)
         return None
 
@@ -953,7 +982,7 @@ class Checkpoint:
                 self._probe_store(store, slot)
             except Exception as exc:
                 if health.record_failure(exc):
-                    self.stats["breaker_trips"] += 1
+                    self.stats.inc("breaker_trips")
                     trace.TRACER.emit("breaker", slot=slot)
             else:
                 health.record_success()

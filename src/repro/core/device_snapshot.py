@@ -46,6 +46,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import metrics
 from repro.kernels.snapshot import ops as snapshot_ops
 
 _LANES = 128
@@ -234,4 +235,13 @@ class DeviceSnapshotter:
                       else meta_host[:, 2].astype(bool).tolist()),
             "entropy_bits": entropy,
         }
+        if metrics.REGISTRY.enabled:   # keep the unset path numpy-free
+            if meta["dirty"] is not None:
+                metrics.set_gauge(
+                    "snapshot_dirty_fraction",
+                    sum(meta["dirty"]) / max(1, n_chunks))
+            if staged:
+                metrics.inc("snapshot_d2h_bytes", int(rows.size) * wpc * 4)
+                metrics.inc("snapshot_d2h_bytes_saved",
+                            (n_chunks - int(rows.size)) * wpc * 4)
         return host, meta

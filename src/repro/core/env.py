@@ -172,6 +172,15 @@ class CraftEnv:
                                      # (default off)
     tune_every_s: float              # CRAFT_TUNE_EVERY_S: seconds between
                                      # online re-tuning solves (default 60)
+    # --- live telemetry plane (core/metrics.py / core/telemetry.py) --------
+    metrics: bool                    # CRAFT_METRICS: arm the process-global
+                                     # metrics registry (counters/gauges/
+                                     # histograms); unset = every hook is a
+                                     # single no-op call (default off)
+    metrics_port: int                # CRAFT_METRICS_PORT: serve Prometheus
+                                     # text at /metrics and JSON at /healthz
+                                     # on this port (0 picks an ephemeral
+                                     # port; -1 = exporter off, default)
 
     def tier_every_for(self, slot: str):
         """Cadence spec for a chain slot: int count, "auto", or None (legacy).
@@ -301,6 +310,13 @@ class CraftEnv:
         tune_every_s = float(env.get("CRAFT_TUNE_EVERY_S", "60"))
         if tune_every_s <= 0:
             raise ValueError(f"CRAFT_TUNE_EVERY_S={tune_every_s!r}")
+        metrics = _bool(env, "CRAFT_METRICS", False)
+        metrics_port_raw = env.get("CRAFT_METRICS_PORT", "").strip()
+        metrics_port = int(metrics_port_raw) if metrics_port_raw else -1
+        if metrics_port < -1 or metrics_port > 65535:
+            raise ValueError(f"CRAFT_METRICS_PORT={metrics_port!r}")
+        if metrics_port >= 0:
+            metrics = True      # an exporter implies an armed registry
         io_workers_raw = env.get("CRAFT_IO_WORKERS")
         if io_workers_raw is None:
             io_workers = min(4, os.cpu_count() or 1)
@@ -357,6 +373,8 @@ class CraftEnv:
             trace_path=trace_path,
             tune_online=tune_online,
             tune_every_s=tune_every_s,
+            metrics=metrics,
+            metrics_port=metrics_port,
         )
 
 

@@ -29,6 +29,7 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.core import metrics
 from repro.core.cpbase import CheckpointError
 
 #: errno values treated as transient (worth retrying in place).
@@ -154,8 +155,18 @@ class TierHealth:
         self.breaker = CircuitBreaker(threshold, cooldown_s, clock=clock)
         self.last_error: Optional[str] = None
 
+    #: breaker state as a scrapable level (worst-case-wins across ranks)
+    _STATE_CODE = {CLOSED: 0.0, HALF_OPEN: 1.0, OPEN: 2.0}
+
+    def _publish_state(self) -> None:
+        metrics.set_gauge("breaker_state",
+                          self._STATE_CODE.get(self.breaker.state, -1.0),
+                          slot=self.slot)
+
     def allow(self) -> bool:
-        return self.breaker.allow()
+        ok = self.breaker.allow()   # may transition OPEN → HALF_OPEN
+        self._publish_state()
+        return ok
 
     def probe_due(self) -> bool:
         return self.breaker.probe_due()
@@ -163,10 +174,15 @@ class TierHealth:
     def record_success(self) -> None:
         self.last_error = None
         self.breaker.record_success()
+        self._publish_state()
 
     def record_failure(self, exc: BaseException) -> bool:
         self.last_error = f"{type(exc).__name__}: {exc}"
-        return self.breaker.record_failure()
+        tripped = self.breaker.record_failure()
+        if tripped:
+            metrics.inc("breaker_trips", slot=self.slot)
+        self._publish_state()
+        return tripped
 
     @property
     def state(self) -> str:

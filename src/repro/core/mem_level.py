@@ -51,12 +51,13 @@ import os
 import shutil
 import tempfile
 import threading
+import time as _time
 from pathlib import Path
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import storage, tiers
+from repro.core import metrics, storage, tiers
 from repro.core.cpbase import CheckpointError, IOContext
 from repro.core.tiers import StorageTier
 from repro.kernels.checksum import ops as checksum_ops
@@ -430,6 +431,7 @@ class MemStore(StorageTier):
 
     def publish(self, staged: Path, version: int,
                 extra_meta: Optional[dict] = None) -> None:
+        t0 = _time.perf_counter()
         # fabric coverage for the chaos engine: an injected fault here makes
         # the RAM tier misbehave exactly like a failing fabric insert would
         self._chaos_check("fabric", path=staged)
@@ -459,6 +461,8 @@ class MemStore(StorageTier):
         kept = sorted(self.fabric.versions(self.name))[-self.keep_versions:]
         self.fabric.prune(self.name, self.rank, kept)
         shutil.rmtree(staged, ignore_errors=True)
+        metrics.observe("publish_seconds", _time.perf_counter() - t0,
+                        tier="mem")
 
     def _slurp(self, staged: Path
                ) -> Tuple[Dict[str, _MemEntry], Optional[Exception]]:

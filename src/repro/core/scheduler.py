@@ -43,7 +43,7 @@ import threading
 import time
 from typing import Callable, Dict, Optional, Tuple
 
-from repro.core import trace
+from repro.core import metrics, trace
 from repro.core.env import CraftEnv
 
 #: Fallback MTBF when neither ``CRAFT_MTBF_SECONDS`` nor an empirical rate
@@ -467,6 +467,7 @@ class CheckpointPolicy:
         trace.TRACER.emit("degraded", slot=slot)
         self._degraded.add(slot)
         self._last_write_t[slot] = -math.inf
+        metrics.set_gauge("policy_degraded_slots", len(self._degraded))
 
     def note_tier_written(self, slot: str) -> None:
         """A write actually landed on ``slot`` (called by ``Checkpoint`` on
@@ -474,6 +475,7 @@ class CheckpointPolicy:
         :meth:`record_written` which only sees the *scheduled* tier set)."""
         self._degraded.discard(slot)
         self._deferred.discard(slot)
+        metrics.set_gauge("policy_degraded_slots", len(self._degraded))
         if slot in self._last_write_t:
             self._last_write_t[slot] = self._clock()
 
@@ -518,6 +520,7 @@ class CheckpointPolicy:
                 changed[slot] = count
         if changed:
             self.stats["online_retunes"] += 1
+            metrics.inc("policy_retunes")
             trace.TRACER.emit("retune", cadence={
                 s: self._cadence[s] for s in self._chain})
 
@@ -525,6 +528,9 @@ class CheckpointPolicy:
     def _emit(self, d: Decision) -> Decision:
         if not d.write:
             self.stats["skips"] += 1
+        if metrics.REGISTRY.enabled:   # skip the kwargs build on the no-op
+            metrics.inc("policy_decisions", reason=d.reason or "skip",
+                        write="true" if d.write else "false")
         tr = trace.TRACER
         if tr.enabled:
             it, cp_freq, next_version, pending = self._trace_inputs

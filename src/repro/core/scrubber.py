@@ -48,7 +48,7 @@ import shutil
 from pathlib import Path
 from typing import List, Optional, Tuple
 
-from repro.core import storage, tiers
+from repro.core import metrics, storage, tiers
 from repro.core.cpbase import CheckpointError, IOContext
 
 #: Unthrottled slices still stop after this many verified bytes, so a scrub
@@ -91,13 +91,15 @@ class Scrubber:
         self.env = checkpoint.env
         self._clock = checkpoint._clock
         self._queue: List[Tuple[str, int]] = []     # pending (slot, version)
-        self.stats = {
+        # StatsView mirrors every counter into the live metrics registry
+        # as scrub_* series (chunks verified/repaired on the scoreboard)
+        self.stats = metrics.StatsView(checkpoint.name, {
             "slices": 0, "passes": 0, "errors": 0,
             "files_scanned": 0, "bytes_scanned": 0,
             "corrupt_found": 0, "repaired": 0,
             "quarantined": 0, "unrepairable": 0,
             "parity_checked": 0, "parity_repaired": 0,
-        }
+        }, prefix="scrub_")
 
     # -------------------------------------------------------------- driving
     def opportunity(self) -> bool:

@@ -29,7 +29,7 @@ import shutil
 from pathlib import Path
 from typing import List, Optional, Set, Tuple
 
-from repro.core import trace
+from repro.core import metrics, trace
 
 _TMP_PREFIX = ".tmp-"
 _VERSION_PREFIX = "v-"
@@ -308,6 +308,10 @@ class StorageTier(abc.ABC):
         scheduler consumes the estimate via :meth:`write_cost`)."""
         trace.TRACER.emit("tier_cost", tier=self.label,
                           seconds=seconds, nbytes=nbytes)
+        # one choke point covers every tier's write latency/throughput
+        metrics.inc("tier_writes", tier=self.label)
+        metrics.inc("tier_write_bytes", nbytes, tier=self.label)
+        metrics.observe("tier_write_seconds", seconds, tier=self.label)
         stats = getattr(self, "io_stats", None)
         if stats is None:
             stats = self.io_stats = {
@@ -322,6 +326,8 @@ class StorageTier(abc.ABC):
         self._cost_ewma = seconds if prev is None else (
             (1.0 - self.COST_ALPHA) * prev + self.COST_ALPHA * seconds
         )
+        metrics.set_gauge("tier_cost_ewma_seconds", self._cost_ewma,
+                          tier=self.label)
 
     def write_cost(self):
         """Estimated seconds per version write: the EWMA of observed writes,

@@ -84,6 +84,7 @@ class JsonlTracer:
         self._clock = clock
         self._t0 = clock()
         self._lock = threading.Lock()
+        self._closed = False
         parent = os.path.dirname(self.path)
         if parent:
             os.makedirs(parent, exist_ok=True)
@@ -94,12 +95,25 @@ class JsonlTracer:
         rec.update(fields)
         line = json.dumps(rec, separators=(",", ":"), default=str)
         with self._lock:
-            if self._fh.closed:
+            # Re-check liveness *under the lock*: a concurrent uninstall()
+            # (telemetry shutdown hook, test teardown) may have closed the
+            # writer between the module-level TRACER read and here — without
+            # this a mid-emit close could tear the final line or raise on a
+            # closed file.
+            if self._closed or self._fh.closed:
                 return
-            self._fh.write(line + "\n")
+            try:
+                self._fh.write(line + "\n")
+            except ValueError:       # closed out from under us (interp exit)
+                self._closed = True
 
     def close(self) -> None:
+        # Idempotent and thread-safe: emit() holds the same lock, so a close
+        # always lands between whole lines, never inside one.
         with self._lock:
+            if self._closed:
+                return
+            self._closed = True
             if not self._fh.closed:
                 self._fh.flush()
                 self._fh.close()

@@ -134,7 +134,18 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=64)
     ap.add_argument("--cp-freq", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics + /healthz on this port (k8s "
+                         "liveness probe; same as CRAFT_METRICS_PORT)")
     args = ap.parse_args()
+    if args.metrics_port is not None:
+        # Start the exporter up front so the replica answers its liveness
+        # probe during prefill, before any Checkpoint commits.
+        from repro.core import metrics, telemetry
+
+        metrics.install()
+        port = telemetry.start(args.metrics_port)
+        print(f"telemetry: /metrics + /healthz on port {port}")
     sc = ServeConfig(arch=args.arch, tiny=args.tiny, batch=args.batch,
                      prompt_len=args.prompt_len, gen_tokens=args.gen,
                      cp_freq=args.cp_freq)

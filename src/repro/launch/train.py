@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import Box, Checkpoint
+from repro.core import metrics as craft_metrics
 from repro.core.aft import aft_zone
 from repro.data.pipeline import DataCursor, SyntheticTokens
 from repro.models import model as M
@@ -161,6 +162,11 @@ def run(tc: TrainConfig, comm=None, mesh=None,
                 timer.observe(time.perf_counter() - step_t0)
                 if cp.policy is not None and timer.last is not None:
                     cp.policy.observe_step_seconds(timer.last)
+                # live telemetry: step cadence + loss on the scoreboard
+                if craft_metrics.REGISTRY.enabled:
+                    craft_metrics.observe("train_step_seconds", timer.last)
+                    craft_metrics.set_gauge("train_loss", loss)
+                    craft_metrics.set_gauge("train_step", step_box.value)
                 if on_step is not None:
                     on_step(step_box.value, metrics)
                 if (tc.fail_at_step is not None
